@@ -1,0 +1,45 @@
+"""Communication savings from merging (paper §IV claim: fewer active nodes
+-> lower overhead). Reads the fig2 cache; reports updates/round and
+bytes/round before and after the merge round, per scenario, plus the
+at-scale projection (pod-clients exchanging 34B-param updates)."""
+from __future__ import annotations
+
+import json
+import os
+
+YI34B_PARAMS = 34.4e9  # at-scale projection: each client update = one model
+
+
+def run(cache: str = "experiments/fl/fig2.json"):
+    if not os.path.exists(cache):
+        print(f"(no {cache}; run fig2_robustness first)")
+        return None
+    with open(cache) as f:
+        results = json.load(f)
+    print(f"{'run':>24s} {'nodes pre':>9s} {'nodes post':>10s} {'bytes/round pre':>15s} "
+          f"{'post':>12s} {'saving':>7s}")
+    out = {}
+    for tag, r in sorted(results.items()):
+        if not r.get("active"):
+            continue
+        pre_n, post_n = r["active"][0], r["active"][-1]
+        pre_b, post_b = r["bytes"][0], r["bytes"][-1]
+        sav = 1 - post_b / pre_b if pre_b else 0.0
+        out[tag] = (pre_n, post_n, pre_b, post_b, sav)
+        print(f"{tag:>24s} {pre_n:9d} {post_n:10d} {pre_b:15,d} {post_b:12,d} "
+              f"{100*sav:6.1f}%")
+    # at-scale projection
+    any_prop = next((v for k, v in out.items() if "proposed" in k), None)
+    if any_prop:
+        pre_n, post_n = any_prop[0], any_prop[1]
+        per_update = YI34B_PARAMS * 2  # bf16 bytes
+        print(
+            f"\nat pod scale (yi-34b clients, bf16 updates): "
+            f"{pre_n * per_update/1e9:.0f} GB -> {post_n * per_update/1e9:.0f} GB "
+            f"per round across the DCN ({100*(1-post_n/pre_n):.0f}% fewer updates)"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

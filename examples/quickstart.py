@@ -1,0 +1,54 @@
+"""Quickstart: the paper's mechanism in ~60 lines of public API.
+
+Ten clients train a CNN on non-IID synthetic MNIST with SCAFFOLD; at round
+2 the Pearson-correlation merging algorithm folds similar clients into
+intermediary nodes; training continues with fewer active nodes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import cnn_mnist
+from repro.core import AlgoConfig, FederatedSimulator, FLConfig
+from repro.data import make_synthetic_mnist, partition_noniid_classes
+from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+
+def main():
+    ccfg = cnn_mnist.config()
+
+    # 1. data: synthetic MNIST, partitioned non-IID across 10 clients
+    x_tr, y_tr, x_te, y_te = make_synthetic_mnist(n_train=3000, n_test=600)
+    parts = partition_noniid_classes(y_tr, num_clients=10, seed=0)
+    shards = [(x_tr[p], y_tr[p]) for p in parts]
+    print("client shard sizes:", [len(p) for p in parts])
+
+    # 2. federated config: SCAFFOLD + the paper's merging at round 2
+    fl = FLConfig(
+        algo=AlgoConfig(algorithm="scaffold", lr_local=0.05),
+        num_rounds=5,
+        local_epochs=2,
+        steps_per_epoch=6,
+        batch_size=32,
+        merge_enabled=True,
+        merge_round=2,
+        threshold=0.7,
+        max_group_size=3,
+    )
+
+    # 3. simulate
+    sim = FederatedSimulator(
+        init_params_fn=lambda key: cnn_init(key, ccfg),
+        loss_fn=lambda params, batch: cnn_loss(params, ccfg, batch),
+        eval_fn=lambda params: cnn_accuracy(params, ccfg, x_te, y_te),
+        client_shards=shards,
+        fl=fl,
+    )
+    history = sim.run(verbose=True)
+
+    final = history[-1]
+    print(f"\nfinal: accuracy={final.accuracy:.3f}, "
+          f"active nodes {history[0].active_nodes} -> {final.active_nodes}, "
+          f"bytes/round {history[0].bytes_sent:,} -> {final.bytes_sent:,}")
+
+
+if __name__ == "__main__":
+    main()

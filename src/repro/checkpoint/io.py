@@ -1,0 +1,59 @@
+"""npz-based pytree checkpointing.
+
+Leaves are stored under flattened key paths; the treedef is rebuilt from a
+template on load (robust across jax versions, no pickle of treedefs).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list:
+    paths_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    arrays = {}
+    for key, leaf in _leaf_paths(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: store uint16 view
+            arrays[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, template: Any):
+    """Load into the structure of ``template`` (shapes/dtypes must match)."""
+    with np.load(path) as data:
+        keyed = dict(data.items())
+    step = keyed.pop("__step__", None)
+    leaves = []
+    for key, leaf in _leaf_paths(template):
+        if key + "::bf16" in keyed:
+            import ml_dtypes
+            arr = keyed[key + "::bf16"].view(ml_dtypes.bfloat16)
+        elif key in keyed:
+            arr = keyed[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for '{key}': ckpt {arr.shape} vs template {np.shape(leaf)}"
+            )
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return (tree, None if step is None else int(step))

@@ -1,0 +1,37 @@
+"""Architecture configs. Importing this package registers all archs."""
+from repro.configs.base import (
+    CONFIGS,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_archs,
+)
+
+# Register every assigned architecture.
+from repro.configs import (  # noqa: F401
+    cnn_mnist,
+    granite_8b,
+    granite_moe_1b,
+    hubert_xlarge,
+    llama4_maverick,
+    llava_next_34b,
+    qwen3_1_7b,
+    recurrentgemma_2b,
+    starcoder2_15b,
+    xlstm_125m,
+    yi_34b,
+)
+
+ASSIGNED_ARCHS = (
+    "llava-next-34b",
+    "granite-8b",
+    "hubert-xlarge",
+    "starcoder2-15b",
+    "recurrentgemma-2b",
+    "xlstm-125m",
+    "yi-34b",
+    "granite-moe-1b-a400m",
+    "qwen3-1.7b",
+    "llama4-maverick-400b-a17b",
+)

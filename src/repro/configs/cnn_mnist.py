@@ -1,0 +1,22 @@
+"""The paper's own experimental model: a small CNN for (synthetic) MNIST.
+
+Used by the federated-learning reproduction (10 clients, 10 rounds,
+merge at round 4). Not part of the assigned-architecture pool.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str = "cnn-mnist"
+    image_size: int = 28
+    channels: int = 1
+    conv_features: tuple = (16, 32)
+    kernel_size: int = 3
+    hidden: int = 128
+    num_classes: int = 10
+    dtype: str = "float32"
+
+
+def config() -> CNNConfig:
+    return CNNConfig()

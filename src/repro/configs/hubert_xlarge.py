@@ -1,0 +1,24 @@
+"""hubert-xlarge [audio] — encoder-only, wav2vec2-style backbone.
+
+[arXiv:2106.07447]. The conv feature extractor / mel frontend is a stub:
+input_specs supplies precomputed frame embeddings (B, S, d_model).
+Encoder-only => no autoregressive decode; decode_32k / long_500k are
+skipped for this arch (recorded in DESIGN.md / EXPERIMENTS.md).
+"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("hubert-xlarge")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        num_layers=48,
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        head_dim=80,
+        citation="arXiv:2106.07447",
+    )

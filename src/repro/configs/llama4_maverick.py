@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b [moe] — 128 experts top-1, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E]. Early-fusion multimodality is
+represented the same way as the VLM stub (patch embeddings concatenated
+with text); for the assigned shapes we lower the text path.
+"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("llama4-maverick-400b-a17b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=8192,  # per-expert FFN width
+        vocab_size=202048,
+        head_dim=128,
+        num_experts=128,
+        experts_per_token=1,
+        rope_theta=500_000.0,
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )

@@ -1,0 +1,25 @@
+"""llava-next-34b [vlm] — anyres tiling, yi-34b language backbone.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] (34B variant uses the Yi-34B LM).
+Vision tower + projector are a stub: input_specs supplies precomputed patch
+embeddings (anyres: 4 tiles + 1 base image x 576 patches = 2880 tokens).
+"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("llava-next-34b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        family="vlm",
+        num_layers=60,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        head_dim=128,
+        rope_theta=5_000_000.0,
+        num_patch_tokens=2880,
+        citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )

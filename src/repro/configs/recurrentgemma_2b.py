@@ -1,0 +1,26 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 2 recurrent : 1
+attention block pattern. [arXiv:2402.19427]
+
+Runs long_500k natively: the RG-LRU state is O(d) and the attention blocks
+are sliding-window (2048).
+"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("recurrentgemma-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        num_layers=26,  # 26 blocks: pattern (rglru, rglru, attn) repeated
+        d_model=2560,
+        num_heads=10,
+        num_kv_heads=1,
+        d_ff=7680,
+        vocab_size=256000,
+        head_dim=256,
+        window_size=2048,
+        block_pattern=("rglru", "rglru", "attn"),
+        rglru_width=2560,
+        citation="arXiv:2402.19427",
+    )

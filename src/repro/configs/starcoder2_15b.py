@@ -1,0 +1,19 @@
+"""starcoder2-15b [dense] — GQA, RoPE. [arXiv:2402.19173]"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("starcoder2-15b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-15b",
+        family="dense",
+        num_layers=40,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        head_dim=128,
+        rope_theta=100_000.0,
+        citation="arXiv:2402.19173",
+    )

@@ -1,0 +1,24 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks, no separate FFN (d_ff=0).
+
+[arXiv:2405.04517]. Block mix follows the xLSTM[7:1]-style recipe: sLSTM
+at blocks {3, 7}, mLSTM elsewhere. Constant-size recurrent state => runs
+long_500k natively.
+"""
+from repro.configs.base import CONFIGS, ModelConfig
+
+
+@CONFIGS.register("xlstm-125m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        num_layers=12,
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,  # xLSTM blocks carry their own up/down projections
+        vocab_size=50304,
+        head_dim=192,
+        slstm_at=(3, 7),
+        citation="arXiv:2405.04517",
+    )

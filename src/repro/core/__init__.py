@@ -1,0 +1,12 @@
+from repro.core.pearson import pearson_matrix, pearson_matrix_fast, client_param_matrix
+from repro.core.merging import (
+    MergePlan,
+    merge_clients,
+    build_merge_plan,
+    apply_merge,
+    merged_data_sizes,
+)
+from repro.core.scaffold import AlgoConfig, make_round_fn, init_controls
+from repro.core.fedavg import make_fedavg_round, fedavg_config
+from repro.core.fedprox import make_fedprox_round, fedprox_config
+from repro.core.federation import FLConfig, Scenario, FederatedSimulator, RoundRecord

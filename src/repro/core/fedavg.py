@@ -1,0 +1,11 @@
+"""FedAvg baseline (McMahan et al. 2017) — thin wrapper over the shared
+round engine with no control variates and no proximal term."""
+from repro.core.scaffold import AlgoConfig, make_round_fn
+
+
+def fedavg_config(lr_local: float = 0.05, lr_global: float = 1.0) -> AlgoConfig:
+    return AlgoConfig(algorithm="fedavg", lr_local=lr_local, lr_global=lr_global)
+
+
+def make_fedavg_round(loss_fn, lr_local: float = 0.05, lr_global: float = 1.0):
+    return make_round_fn(loss_fn, fedavg_config(lr_local, lr_global))

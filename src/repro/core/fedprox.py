@@ -1,0 +1,18 @@
+"""FedProx baseline (Li et al. 2018) — local objective gains the proximal
+term (mu/2)||x - x_global||^2, keeping local models near the global model
+under heterogeneity (paper §II)."""
+from repro.core.scaffold import AlgoConfig, make_round_fn
+
+
+def fedprox_config(
+    lr_local: float = 0.05, lr_global: float = 1.0, prox_mu: float = 0.1
+) -> AlgoConfig:
+    return AlgoConfig(
+        algorithm="fedprox", lr_local=lr_local, lr_global=lr_global, prox_mu=prox_mu
+    )
+
+
+def make_fedprox_round(
+    loss_fn, lr_local: float = 0.05, lr_global: float = 1.0, prox_mu: float = 0.1
+):
+    return make_round_fn(loss_fn, fedprox_config(lr_local, lr_global, prox_mu))

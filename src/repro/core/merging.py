@@ -1,0 +1,132 @@
+"""The paper's client-merging algorithm (§IV.D pseudocode, faithful).
+
+Host-side (numpy) control logic: it runs once per merge round on a K x K
+matrix, so there is nothing to accelerate; determinism and exact pseudocode
+fidelity matter more. The output is converted into a fixed-shape
+*merge matrix* W (K x K, row-stochastic on group representatives, identity
+on unmerged nodes, zero rows for retired nodes) plus an updated active
+mask, so the jitted federated round never changes shape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+
+@dataclass(frozen=True)
+class MergePlan:
+    groups: Tuple[Tuple[int, ...], ...]      # merged groups (indices)
+    unmerged: Tuple[int, ...]                # independent nodes
+    W: np.ndarray                            # (K, K) merge matrix
+    active: np.ndarray                       # (K,) bool — representatives + unmerged
+    representatives: Tuple[int, ...]         # rep (first member) per group
+
+
+def merge_clients(
+    correlation: np.ndarray,
+    threshold: float = 0.7,
+    max_group_size: int = 3,
+    active: Optional[np.ndarray] = None,
+) -> Tuple[List[List[int]], List[int]]:
+    """Exact transcription of the paper's 'Proposed algorithm for merging
+    clients in FL' (inputs: correlation matrix, threshold, max_group_size;
+    outputs: groups, unmerged_nodes)."""
+    K = correlation.shape[0]
+    if active is None:
+        active = np.ones(K, bool)
+    used: set = set()
+    groups: List[List[int]] = []
+    unmerged: List[int] = []
+
+    for i in range(K):                       # "Group similar nodes"
+        if i in used or not active[i]:
+            continue
+        group = [i]
+        for j in range(K):
+            if j == i or j in used or not active[j]:
+                continue
+            if correlation[i, j] >= threshold:
+                group.append(j)
+                if len(group) == max_group_size:
+                    break
+        if len(group) > 1:
+            groups.append(group)
+            used.update(group)
+        else:
+            unmerged.append(i)               # single node, no matches
+    for i in range(K):                       # "Handle remaining nodes"
+        if i not in used and i not in unmerged and active[i]:
+            unmerged.append(i)
+    return groups, unmerged
+
+
+def build_merge_plan(
+    correlation: np.ndarray,
+    data_sizes: Sequence[int],
+    threshold: float = 0.7,
+    max_group_size: int = 3,
+    active: Optional[np.ndarray] = None,
+    alpha: str = "uniform",                  # "uniform" | "data" — merge weights
+) -> MergePlan:
+    """Greedy grouping -> fixed-shape merge matrix.
+
+    x_merged = sum_g alpha_g x_g  (paper Eq. line 45, generalised to groups;
+    alpha='uniform' gives the paper's alpha=0.5 for pairs)."""
+    K = correlation.shape[0]
+    if active is None:
+        active = np.ones(K, bool)
+    groups, unmerged = merge_clients(correlation, threshold, max_group_size, active)
+
+    W = np.zeros((K, K), np.float32)
+    new_active = np.zeros(K, bool)
+    reps = []
+    for group in groups:
+        rep = group[0]
+        reps.append(rep)
+        if alpha == "data":
+            ws = np.asarray([data_sizes[j] for j in group], np.float64)
+            ws = ws / ws.sum()
+        else:
+            ws = np.full(len(group), 1.0 / len(group))
+        for j, w in zip(group, ws):
+            W[rep, j] = w
+        new_active[rep] = True
+    for i in unmerged:
+        W[i, i] = 1.0
+        new_active[i] = True
+    return MergePlan(
+        groups=tuple(tuple(g) for g in groups),
+        unmerged=tuple(unmerged),
+        W=W,
+        active=new_active,
+        representatives=tuple(reps),
+    )
+
+
+def apply_merge(plan: MergePlan, stacked_tree):
+    """Apply W to every leaf of a stacked (K, ...) pytree:
+    out[k] = sum_j W[k, j] * in[j]. Representatives receive the convex
+    combination (paper lines 45-46: x_merged, c_merged); retired rows zero."""
+    W = plan.W
+
+    def _mix(leaf):
+        flat = np.asarray(leaf).reshape(leaf.shape[0], -1)
+        out = (W @ flat.astype(np.float64)).astype(flat.dtype)
+        return out.reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(_mix, stacked_tree)
+
+
+def merged_data_sizes(plan: MergePlan, data_sizes: Sequence[int]) -> np.ndarray:
+    """Intermediary nodes answer for their members' data: n_rep = sum n_j."""
+    K = len(data_sizes)
+    out = np.zeros(K, np.int64)
+    for group in plan.groups:
+        out[group[0]] = sum(int(data_sizes[j]) for j in group)
+    for i in plan.unmerged:
+        out[i] = int(data_sizes[i])
+    return out

@@ -1,0 +1,86 @@
+"""Robust server-side aggregators (paper §III baselines: filtering /
+Byzantine-robust aggregation), selectable via AlgoConfig.aggregator.
+
+All operate on stacked client deltas (K, ...) under fixed shapes:
+  mean     — weighted mean (FedAvg/SCAFFOLD default, paper Eq. 1)
+  median   — coordinate-wise median
+  trimmed  — coordinate-wise trimmed mean (drop the ``trim`` highest and
+             lowest values per coordinate)
+  krum     — select the single client minimizing the summed distance to its
+             K - f - 2 nearest neighbours (Blanchard et al. 2017), f = trim
+
+Dropped/retired clients (mask 0) contribute a ZERO delta — a "no change"
+vote, neutral for median/trimmed and conservative for krum (documented
+choice: fixed shapes preclude dynamic-K medians under jit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_scale
+
+
+def _bshape(vec, t):
+    return vec.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype)
+
+
+def aggregate_mean(dx, weights_norm):
+    return jax.tree_util.tree_map(
+        lambda t: jnp.sum(t * _bshape(weights_norm, t), axis=0), dx
+    )
+
+
+def aggregate_median(dx, part):
+    """Coordinate-wise median; masked clients vote 0."""
+    return jax.tree_util.tree_map(
+        lambda t: jnp.median(t * _bshape(part, t), axis=0), dx
+    )
+
+
+def aggregate_trimmed(dx, part, trim: int = 1):
+    """Coordinate-wise trimmed mean, dropping ``trim`` from each end."""
+    def _tm(t):
+        masked = t * _bshape(part, t)
+        s = jnp.sort(masked, axis=0)
+        kept = s[trim : t.shape[0] - trim]
+        return jnp.mean(kept, axis=0)
+
+    return jax.tree_util.tree_map(_tm, dx)
+
+
+def aggregate_krum(dx, part, f: int = 1):
+    """Krum: return the delta of the client with the lowest score
+    (sum of squared distances to its K - f - 2 nearest neighbours)."""
+    leaves = jax.tree_util.tree_leaves(dx)
+    K = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [
+            (l * _bshape(part, l)).reshape(K, -1).astype(jnp.float32)
+            for l in leaves
+        ],
+        axis=1,
+    )
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * flat @ flat.T       # (K, K)
+    d2 = d2 + jnp.where(jnp.eye(K, dtype=bool), jnp.inf, 0.0)
+    # masked clients can't be selected and repel selection
+    d2 = jnp.where(part[None, :] > 0, d2, jnp.inf)
+    m = max(K - f - 2, 1)
+    nearest = jnp.sort(jnp.where(jnp.isinf(d2), 1e30, d2), axis=1)[:, :m]
+    scores = jnp.sum(nearest, axis=1)
+    scores = jnp.where(part > 0, scores, jnp.inf)
+    best = jnp.argmin(scores)
+    return jax.tree_util.tree_map(lambda t: t[best], dx)
+
+
+def aggregate(name: str, dx, weights_norm, part, trim: int = 1):
+    if name == "mean":
+        return aggregate_mean(dx, weights_norm)
+    if name == "median":
+        return aggregate_median(dx, part)
+    if name == "trimmed":
+        return aggregate_trimmed(dx, part, trim)
+    if name == "krum":
+        return aggregate_krum(dx, part, trim)
+    raise ValueError(f"unknown aggregator '{name}'")

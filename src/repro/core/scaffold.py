@@ -1,0 +1,151 @@
+"""SCAFFOLD federated round (paper §IV.D algorithm 2) over *stacked* clients.
+
+All K clients live on a leading axis of one pytree and run under ``vmap``
+— on the production mesh this axis maps onto the federation ('pod') mesh
+axis, in the CPU sim it vmaps. One jitted function executes a full
+communication round:
+
+  client i:  x_i <- x ; E local steps of
+             x_i <- x_i - eta_l * (grad f_i(x_i) + c - c_i)      (SCAFFOLD)
+             c_i' <- c_i - c + (x - x_i) / (steps_i * eta_l)     (Option II)
+  server:    x <- x + eta_g * sum_i w_i (x_i - x)                (Eq. 1)
+             c <- c + (1/K_active) sum_i (c_i' - c_i)            (Eq. 3)
+
+``paper_faithful=True`` reproduces the paper's printed Eq. 2 variant
+(x_i - eta_l*grad + (c - c_i), drift correction outside the learning rate)
+— dimensionally odd but recorded for fidelity (DESIGN.md §1).
+
+Fault/attack hooks (all fixed-shape):
+  steps_mask   (K, S)  — 0 entries freeze a step: packet-loss truncation
+  round_mask   (K,)    — 0 drops the client's update entirely this round
+  poison_scale (K,)    — multiplies the sent delta: model poisoning
+                         (1 healthy, -1 sign-flip, >1 scaling attack)
+  active       (K,)    — merge mask: retired (merged-away) nodes are 0
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_add, tree_scale, tree_sub
+
+
+@dataclass(frozen=True)
+class AlgoConfig:
+    algorithm: str = "scaffold"     # "scaffold" | "fedavg" | "fedprox"
+    lr_local: float = 0.05
+    lr_global: float = 1.0
+    prox_mu: float = 0.0            # fedprox proximal strength
+    paper_faithful: bool = False
+    # server aggregation of deltas: "mean" (paper Eq. 1) | "median" |
+    # "trimmed" | "krum" — robust baselines from the paper's §III survey
+    aggregator: str = "mean"
+    trim: int = 1                   # trimmed: per-end count; krum: f
+
+
+def make_round_fn(loss_fn, algo: AlgoConfig):
+    """loss_fn(params, batch) -> scalar. Returns a jit-able round function."""
+
+    def local_update(x_g, c_g, c_i, batches_i, smask_i):
+        """One client. batches_i: pytree leaves (S, B, ...); smask_i: (S,)."""
+
+        def step(x, inp):
+            batch, m = inp
+            loss, g = jax.value_and_grad(loss_fn)(x, batch)
+            if algo.algorithm == "scaffold":
+                if algo.paper_faithful:
+                    # paper Eq.2: x - eta_l*grad + (c - c_i)
+                    upd = jax.tree_util.tree_map(
+                        lambda gg, cg, ci: -algo.lr_local * gg + (cg - ci),
+                        g, c_g, c_i,
+                    )
+                else:
+                    upd = jax.tree_util.tree_map(
+                        lambda gg, cg, ci: -algo.lr_local * (gg + cg - ci),
+                        g, c_g, c_i,
+                    )
+            elif algo.algorithm == "fedprox":
+                upd = jax.tree_util.tree_map(
+                    lambda gg, xx, xg: -algo.lr_local
+                    * (gg + algo.prox_mu * (xx - xg)),
+                    g, x, x_g,
+                )
+            else:  # fedavg
+                upd = tree_scale(g, -algo.lr_local)
+            x = jax.tree_util.tree_map(lambda xx, uu: xx + m * uu, x, upd)
+            return x, loss
+
+        x_final, losses = jax.lax.scan(step, x_g, (batches_i, smask_i))
+        n_eff = jnp.maximum(jnp.sum(smask_i), 1.0)
+        if algo.algorithm == "scaffold":
+            # Option II control update
+            c_i_new = jax.tree_util.tree_map(
+                lambda ci, cg, xg, xf: ci - cg + (xg - xf) / (n_eff * algo.lr_local),
+                c_i, c_g, x_g, x_final,
+            )
+        else:
+            c_i_new = c_i
+        dx = tree_sub(x_final, x_g)
+        dc = tree_sub(c_i_new, c_i)
+        mean_loss = jnp.sum(losses * smask_i) / n_eff
+        return dx, dc, c_i_new, x_final, mean_loss
+
+    def round_fn(
+        x_g,                # global params
+        c_g,                # global control (zeros for fedavg/fedprox)
+        c_locals,           # stacked (K, ...) local controls
+        batches,            # stacked (K, S, B, ...) pytree
+        steps_mask,         # (K, S) f32
+        weights,            # (K,) f32 — n_i (data sizes)
+        active,             # (K,) f32 — merge mask
+        round_mask,         # (K,) f32 — packet-drop mask this round
+        poison_scale,       # (K,) f32 — model-poisoning factor
+    ):
+        dx, dc, c_new, x_locals, losses = jax.vmap(
+            local_update, in_axes=(None, None, 0, 0, 0)
+        )(x_g, c_g, c_locals, batches, steps_mask)
+
+        part = active * round_mask                    # who is heard this round
+        dx = jax.tree_util.tree_map(
+            lambda t: t * _bshape(poison_scale * part, t), dx
+        )
+        w = weights * part
+        wn = w / jnp.maximum(jnp.sum(w), 1e-9)        # n_i / n over participants
+
+        from repro.core.robust_agg import aggregate
+        dx_avg = aggregate(algo.aggregator, dx, wn, part, algo.trim)
+        x_g_new = tree_add(x_g, tree_scale(dx_avg, algo.lr_global))
+
+        if algo.algorithm == "scaffold":
+            k_active = jnp.maximum(jnp.sum(part), 1.0)
+            dc_avg = jax.tree_util.tree_map(
+                lambda t: jnp.sum(t * _bshape(part, t), axis=0) / k_active, dc
+            )
+            c_g_new = tree_add(c_g, dc_avg)
+            # clients that were dropped keep their old control state
+            c_new = jax.tree_util.tree_map(
+                lambda new, old: new * _bshape(part, new)
+                + old * _bshape(1.0 - part, old),
+                c_new, c_locals,
+            )
+        else:
+            c_g_new = c_g
+        return x_g_new, c_g_new, c_new, x_locals, losses
+
+    return round_fn
+
+
+def _bshape(vec, t):
+    """Broadcast (K,) against a (K, ...) leaf."""
+    return vec.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype)
+
+
+def init_controls(params, num_clients: int):
+    """Zero global + stacked local control variates."""
+    c_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    c_l = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((num_clients,) + x.shape, x.dtype), params
+    )
+    return c_g, c_l

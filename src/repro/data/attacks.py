@@ -1,0 +1,74 @@
+"""Data/model poisoning attacks (paper §IV.C).
+
+Data poisoning operates on a client's local dataset BEFORE training:
+  * label_flip       — y → (y + 1) mod C (or targeted flip a→b)
+  * feature_noise    — heavy gaussian corruption of inputs
+  * inject_fake_data — append mislabeled random samples
+
+Model poisoning operates on the client's update AFTER training:
+  * scale_update     — multiply the delta by a large factor
+  * sign_flip_update — send the negated delta
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+from repro.utils.pytree import tree_scale, tree_sub, tree_add
+
+
+def label_flip(
+    y: np.ndarray,
+    num_classes: int = 10,
+    source: Optional[int] = None,
+    target: Optional[int] = None,
+    flip_frac: float = 1.0,
+    seed: int = 0,
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    y = y.copy()
+    mask = rng.random(len(y)) < flip_frac
+    if source is None:
+        y[mask] = (y[mask] + 1) % num_classes
+    else:
+        sel = mask & (y == source)
+        y[sel] = target if target is not None else (source + 1) % num_classes
+    return y
+
+
+def feature_noise(
+    x: np.ndarray, sigma: float = 1.0, frac: float = 1.0, seed: int = 0
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = x.copy()
+    mask = rng.random(len(x)) < frac
+    x[mask] = np.clip(
+        x[mask] + rng.normal(0, sigma, x[mask].shape).astype(x.dtype), 0, 1
+    )
+    return x
+
+
+def inject_fake_data(
+    x: np.ndarray, y: np.ndarray, frac: float = 0.5, num_classes: int = 10,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    n_fake = int(len(x) * frac)
+    xf = rng.random((n_fake,) + x.shape[1:]).astype(x.dtype)
+    yf = rng.integers(0, num_classes, n_fake).astype(y.dtype)
+    return np.concatenate([x, xf]), np.concatenate([y, yf])
+
+
+# ---- model poisoning (applied to updates, jit-safe) -----------------------
+
+def scale_update(global_params, local_params, factor: float = 10.0):
+    """Exaggerate the client's delta: x_g + factor * (x_l - x_g)."""
+    delta = tree_sub(local_params, global_params)
+    return tree_add(global_params, tree_scale(delta, factor))
+
+
+def sign_flip_update(global_params, local_params):
+    delta = tree_sub(local_params, global_params)
+    return tree_add(global_params, tree_scale(delta, -1.0))

@@ -1,0 +1,50 @@
+"""Network fault injection (paper §V: packet loss + network delay).
+
+The paper simulates adverse conditions by "not completing the training
+process in the epochs after the first epoch and by not fully training some
+local nodes". We model that directly:
+
+  * PacketLoss — with prob p per round, a client's post-first-epoch work is
+    lost: its update is truncated to the first local epoch (optionally the
+    update is dropped entirely, the stronger classical reading).
+  * NetworkDelay — a client's update arrives s rounds late; the server
+    aggregates the stale update (staleness buffer).
+
+Both produce per-round boolean/integer schedules so the simulator stays
+deterministic given a seed, and both are pure metadata — the math that
+consumes them lives in core/federation.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PacketLoss:
+    prob: float = 0.3            # chance a client is hit in a round
+    drop_update: bool = False    # True: update never arrives; False: truncated
+    affected_frac: float = 0.5   # fraction of clients that CAN be hit
+    seed: int = 0
+
+    def schedule(self, num_clients: int, num_rounds: int) -> np.ndarray:
+        """(rounds, clients) bool — True where the fault hits."""
+        rng = np.random.default_rng(self.seed)
+        can_hit = rng.random(num_clients) < self.affected_frac
+        hits = rng.random((num_rounds, num_clients)) < self.prob
+        return hits & can_hit[None, :]
+
+
+@dataclass(frozen=True)
+class NetworkDelay:
+    max_delay: int = 2           # rounds of staleness
+    affected_frac: float = 0.5
+    seed: int = 0
+
+    def schedule(self, num_clients: int, num_rounds: int) -> np.ndarray:
+        """(rounds, clients) int — staleness in rounds (0 = on time)."""
+        rng = np.random.default_rng(self.seed)
+        affected = rng.random(num_clients) < self.affected_frac
+        d = rng.integers(0, self.max_delay + 1, (num_rounds, num_clients))
+        return np.where(affected[None, :], d, 0)

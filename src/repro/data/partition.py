@@ -1,0 +1,88 @@
+"""Non-IID partitioners (paper §IV.A / Fig. 1).
+
+Two induced-heterogeneity recipes from the paper's description:
+  * ``partition_noniid_classes`` — each client holds samples from a random
+    subset of classes with unbalanced per-class counts (the paper's Fig. 1
+    setup: e.g. client 1 holds {5822, 622, 496, 6058, 0, 0, 261, ...}).
+  * ``partition_dirichlet`` — standard Dirichlet(α) label-skew partition.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def partition_noniid_classes(
+    labels: np.ndarray,
+    num_clients: int,
+    classes_per_client: int = 6,
+    seed: int = 0,
+    min_frac: float = 0.01,
+) -> List[np.ndarray]:
+    """Paper-style partition: every client gets ``classes_per_client`` of the
+    10 classes; within its class set, per-class shares are heavily skewed
+    (a few dominant classes, a few trace classes), mimicking Fig. 1."""
+    rng = np.random.default_rng(seed)
+    num_classes = int(labels.max()) + 1
+    by_class = [np.flatnonzero(labels == c) for c in range(num_classes)]
+    for idx in by_class:
+        rng.shuffle(idx)
+    cursors = np.zeros(num_classes, np.int64)
+
+    # Which classes each client sees (ensure every class is seen somewhere).
+    client_classes = []
+    for i in range(num_clients):
+        cs = rng.choice(num_classes, size=classes_per_client, replace=False)
+        client_classes.append(set(int(c) for c in cs))
+    for c in range(num_classes):
+        if not any(c in cc for cc in client_classes):
+            client_classes[rng.integers(num_clients)].add(c)
+
+    # Skewed shares: log-uniform weights → some classes dominant, some trace.
+    shares = np.zeros((num_clients, num_classes))
+    for i, cc in enumerate(client_classes):
+        for c in cc:
+            shares[i, c] = np.exp(rng.uniform(np.log(min_frac), 0.0))
+    col = shares.sum(0, keepdims=True)
+    col[col == 0] = 1.0
+    shares = shares / col  # fraction of each class pool per client
+
+    parts: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        pool = by_class[c]
+        counts = np.floor(shares[:, c] * len(pool)).astype(np.int64)
+        for i in range(num_clients):
+            take = pool[cursors[c] : cursors[c] + counts[i]]
+            cursors[c] += counts[i]
+            parts[i].extend(take.tolist())
+    out = [np.asarray(sorted(p), np.int64) for p in parts]
+    # No empty clients: steal one sample from the largest client if needed.
+    for i, p in enumerate(out):
+        if len(p) == 0:
+            donor = int(np.argmax([len(q) for q in out]))
+            out[i] = out[donor][:1]
+            out[donor] = out[donor][1:]
+    return out
+
+
+def partition_dirichlet(
+    labels: np.ndarray, num_clients: int, alpha: float = 0.3, seed: int = 0
+) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    num_classes = int(labels.max()) + 1
+    parts: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(alpha * np.ones(num_clients))
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(np.int64)
+        for i, chunk in enumerate(np.split(idx, cuts)):
+            parts[i].extend(chunk.tolist())
+    out = [np.asarray(sorted(p), np.int64) for p in parts]
+    for i, p in enumerate(out):
+        if len(p) == 0:
+            donor = int(np.argmax([len(q) for q in out]))
+            out[i] = out[donor][:1]
+            out[donor] = out[donor][1:]
+    return out

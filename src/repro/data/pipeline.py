@@ -1,0 +1,62 @@
+"""Client dataset containers + batching for the FL simulator, and a
+deterministic synthetic token stream for the LM-scale architectures."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ClientDataset:
+    """One client's local shard, padded to a fixed size so that all clients
+    can be stacked on a leading K axis and vmapped. ``n`` is the true
+    (unpadded) sample count used for n_i/n weighting."""
+
+    x: np.ndarray      # (cap, ...) padded
+    y: np.ndarray      # (cap,)
+    n: int             # true count (<= cap)
+
+    @staticmethod
+    def build(x: np.ndarray, y: np.ndarray, cap: int) -> "ClientDataset":
+        n = min(len(x), cap)
+        pad = cap - n
+        if pad:
+            # pad by repeating (masked out of the loss via per-client n is
+            # NOT enough for batch sampling; instead we sample indices < n).
+            reps = int(np.ceil(pad / max(n, 1)))
+            x = np.concatenate([x[:n]] + [x[:n]] * reps)[:cap]
+            y = np.concatenate([y[:n]] + [y[:n]] * reps)[:cap]
+        else:
+            x, y = x[:cap], y[:cap]
+        return ClientDataset(x=x, y=y, n=n)
+
+
+def stack_clients(datasets: List[ClientDataset]):
+    """Stack per-client shards -> dict of arrays with leading K axis."""
+    return {
+        "x": np.stack([d.x for d in datasets]),
+        "y": np.stack([d.y for d in datasets]),
+        "n": np.asarray([d.n for d in datasets], np.int32),
+    }
+
+
+def sample_batch_indices(
+    rng: np.random.Generator, n_per_client: np.ndarray, batch: int
+) -> np.ndarray:
+    """(K, batch) indices, each row sampled from [0, n_i)."""
+    K = len(n_per_client)
+    return (rng.random((K, batch)) * n_per_client[:, None]).astype(np.int64)
+
+
+def synthetic_token_stream(
+    vocab_size: int, seq_len: int, batch: int, seed: int = 0
+) -> np.ndarray:
+    """Markov-ish synthetic token batch (B, S) int32 — learnable structure
+    (next token correlated with current) so train losses actually move."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, vocab_size, (batch, 1), dtype=np.int64)
+    steps = rng.integers(-3, 4, (batch, seq_len - 1), dtype=np.int64)
+    toks = np.concatenate([base, steps], axis=1).cumsum(axis=1)
+    return np.mod(toks, vocab_size).astype(np.int32)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  pearson/      -- streaming K x K Pearson correlation over flattened client
+                   parameter vectors (the paper technique's at-scale hot spot)
+  decode_attn/  -- flash-decode GQA attention (serving hot loop)
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Validated with interpret=True on CPU;
+TPU is the lowering target.
+"""
+from repro.kernels.pearson.ops import pearson_corr
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.flash_prefill.ops import flash_prefill_attention

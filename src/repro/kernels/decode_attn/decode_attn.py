@@ -1,0 +1,97 @@
+"""Flash-decode GQA attention Pallas kernel (one new token vs. a long KV
+cache — the serving hot loop for decode_32k / long_500k).
+
+TPU adaptation: decode attention is memory-bound (the whole KV cache
+streams through VMEM once per token), so the kernel keeps the query group
+resident in VMEM, streams (S_BLK, D) cache tiles, and maintains the online
+softmax (m, l, acc) in VMEM scratch across the sequential S grid axis —
+one HBM pass, no (S,) score materialization. The GQA group axis (G = Hq/Kv,
+padded to a sublane multiple) becomes the MXU sublane dim so the q @ k^T
+products are (G, D) x (D, S_BLK) matmuls rather than VPU dot products.
+
+Grid: (B, Kv, S/S_BLK) — the S axis is innermost/sequential (TPU grid
+order), which is what makes the scratch accumulator pattern valid.
+Length + window masking supports both full and sliding-window caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+S_BLK = 512
+
+
+def _kernel(lengths_ref, starts_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D), pre-scaled by ops
+    k = k_ref[0, 0].astype(jnp.float32)            # (S_BLK, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (S_BLK, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (G, S_BLK)
+
+    idx = s * S_BLK + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    length = lengths_ref[b]
+    start = starts_ref[b]
+    valid = (idx < length) & (idx >= start)
+    scores = jnp.where(valid, scores, -1e30)
+
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)                    # (G, S_BLK)
+    alpha = jnp.exp(m_prev - m_new)                # (G, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_decode(q, k, v, lengths, starts, interpret: bool = True):
+    """q: (B, Kv, Gp, D); k, v: (B, Kv, Sp, D); lengths/starts: (B,) int32.
+    Gp multiple of 8, Sp multiple of S_BLK, D multiple of 128 after ops.py
+    padding. Returns (B, Kv, Gp, D)."""
+    B, Kv, Gp, D = q.shape
+    Sp = k.shape[2]
+    assert Gp % 8 == 0 and Sp % S_BLK == 0, (Gp, Sp)
+    grid = (B, Kv, Sp // S_BLK)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, Gp, D), lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, S_BLK, D), lambda b, h, s, *_: (b, h, s, 0)),
+                pl.BlockSpec((1, 1, S_BLK, D), lambda b, h, s, *_: (b, h, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Gp, D), lambda b, h, s, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Gp, 1), jnp.float32),
+                pltpu.VMEM((Gp, 1), jnp.float32),
+                pltpu.VMEM((Gp, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, Gp, D), q.dtype),
+        interpret=interpret,
+    )(lengths, starts, q, k, v)

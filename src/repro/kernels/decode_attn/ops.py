@@ -1,0 +1,40 @@
+"""Jit'd wrapper: GQA layout, padding, window->start conversion."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attn.decode_attn import S_BLK, flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attention(q, k, v, lengths, window: int = 0, interpret: bool = True):
+    """q: (B, Hq, D); k, v: (B, S, Kv, D); lengths: (B,) int32.
+    window > 0 = sliding-window (attend to the last ``window`` positions).
+    Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = Hq // Kv
+    Gp = int(np.ceil(max(G, 8) / 8) * 8)
+    Sp = int(np.ceil(S / S_BLK) * S_BLK)
+    Dp = int(np.ceil(D / 128) * 128)
+
+    # pre-scale by the TRUE head dim (padding would otherwise skew the scale)
+    qg = (q * (1.0 / np.sqrt(D))).astype(q.dtype).reshape(B, Kv, G, D)
+    qp = jnp.zeros((B, Kv, Gp, Dp), q.dtype).at[:, :, :G, :D].set(qg)
+    kt = jnp.moveaxis(k, 1, 2)  # (B, Kv, S, D)
+    vt = jnp.moveaxis(v, 1, 2)
+    kp = jnp.zeros((B, Kv, Sp, Dp), k.dtype).at[:, :, :S, :D].set(kt)
+    vp = jnp.zeros((B, Kv, Sp, Dp), v.dtype).at[:, :, :S, :D].set(vt)
+
+    lengths = lengths.astype(jnp.int32)
+    if window > 0:
+        starts = jnp.maximum(lengths - window, 0)
+    else:
+        starts = jnp.zeros_like(lengths)
+
+    out = flash_decode(qp, kp, vp, lengths, starts, interpret=interpret)
+    return out[:, :, :G, :D].reshape(B, Hq, D)

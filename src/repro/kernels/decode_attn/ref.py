@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-decode GQA attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, lengths, window: int = 0):
+    """q: (B, Hq, D); k, v: (B, S, Kv, D); lengths: (B,) int32 — number of
+    valid cache slots (slots [0, length) hold positions [0, length)).
+    window > 0 restricts attention to the last ``window`` positions.
+    Returns (B, Hq, D) in q.dtype."""
+    B, Hq, D = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = Hq // Kv
+    qg = q.reshape(B, Kv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / np.sqrt(D)
+    idx = jnp.arange(S)[None, :]                       # (1, S)
+    valid = idx < lengths[:, None]
+    if window > 0:
+        valid &= idx >= jnp.maximum(lengths[:, None] - window, 0)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, -1, keepdims=True))
+    probs = probs / jnp.sum(probs, -1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
+    return out.reshape(B, Hq, D).astype(q.dtype)

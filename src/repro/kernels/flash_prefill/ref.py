@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-prefill attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_prefill_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, S, Hq, D); k, v: (B, S, Kv, D) -> (B, S, Hq, D).
+    Full-precision GQA attention with causal / sliding-window masking."""
+    B, S, Hq, D = q.shape
+    Kv = k.shape[2]
+    G = Hq // Kv
+    qg = q.reshape(B, S, Kv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) / np.sqrt(D)
+    pos = jnp.arange(S)
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= pos[None, :] <= pos[:, None]
+    if window > 0:
+        ok &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

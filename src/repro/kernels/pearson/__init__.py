@@ -1,0 +1,1 @@
+from repro.kernels.pearson.ops import pearson_corr

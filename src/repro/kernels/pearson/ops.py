@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the streaming Pearson kernel: padding + finalization."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pearson.pearson import M_BLK, pearson_accumulate
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pearson_corr(X: jnp.ndarray, interpret: bool = True, eps: float = 1e-8):
+    """X: (K, M) any float dtype -> (K, K) f32 Pearson correlation matrix.
+
+    Pads K to a sublane multiple (8) and M to M_BLK (zero pads cancel in the
+    mean/cov finalization because we divide by the true M)."""
+    K, M = X.shape
+    Kp = int(np.ceil(max(K, 8) / 8) * 8)
+    Mp = int(np.ceil(M / M_BLK) * M_BLK)
+    Xp = jnp.zeros((Kp, Mp), X.dtype).at[:K, :M].set(X)
+
+    gram, sums = pearson_accumulate(Xp, interpret=interpret)
+    gram, sums = gram[:K, :K], sums[:K, 0]
+
+    mu = sums / M
+    ms = jnp.diag(gram) / M                      # E[x^2]
+    cov = gram / M - jnp.outer(mu, mu)
+    var = ms - mu * mu
+    # One-pass variance suffers cancellation when |mu| >> sd: the f32 error
+    # floor is ~eps32 * E[x^2]. Rows below that floor are 'constant' and
+    # correlate 0 (matches the two-pass oracle's exact cancellation).
+    tol = 16.0 * jnp.float32(1.19e-7) * ms + eps
+    valid = var > tol
+    sd = jnp.sqrt(jnp.where(valid, var, 1.0))
+    pair_ok = jnp.outer(valid, valid)
+    corr = jnp.where(pair_ok, cov / jnp.outer(sd, sd), 0.0)
+    corr = jnp.clip(corr, -1.0, 1.0)
+    return corr * (1 - jnp.eye(K)) + jnp.eye(K)

@@ -1,0 +1,64 @@
+"""Streaming Pearson-correlation Pallas kernel.
+
+Problem: K client parameter vectors of length M (M up to tens of billions
+at pod scale) -> K x K correlation matrix. A naive implementation
+standardizes a copy of X (one extra full read+write of HBM) and then runs a
+GEMM. This kernel fuses both: each grid step loads one (K, M_BLK) tile into
+VMEM once and accumulates
+
+    gram  += X_blk @ X_blk^T        (MXU, K padded to sublane multiple)
+    sums  += row-sum(X_blk)          (VPU)
+
+so the whole computation is a single pass over HBM at arithmetic intensity
+~K flops/byte. Correlation finalization (tiny, K x K) happens in ops.py.
+
+Grid: (M / M_BLK,) — sequential on TPU, so the accumulators in the output
+VMEM blocks persist across steps; they are zeroed at step 0 via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLK = 2048  # lane-multiple block of the feature axis; (16, 2048) f32 = 128 KiB
+
+
+def _kernel(x_ref, gram_ref, sums_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (Kp, M_BLK)
+    # MXU: (Kp, M_BLK) @ (M_BLK, Kp)
+    gram_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sums_ref[...] += jnp.sum(x, axis=1, keepdims=True)
+
+
+def pearson_accumulate(X: jnp.ndarray, interpret: bool = True):
+    """X: (Kp, Mp) with Kp a multiple of 8 and Mp a multiple of M_BLK
+    (ops.py pads). Returns (gram (Kp,Kp), sums (Kp,1)) in f32."""
+    Kp, Mp = X.shape
+    assert Kp % 8 == 0 and Mp % M_BLK == 0, (Kp, Mp)
+    n_blk = Mp // M_BLK
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_blk,),
+        in_specs=[pl.BlockSpec((Kp, M_BLK), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((Kp, Kp), lambda i: (0, 0)),
+            pl.BlockSpec((Kp, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X)

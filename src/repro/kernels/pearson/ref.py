@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the streaming Pearson-correlation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pearson_corr_ref(X: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """X: (K, M) -> (K, K) f32 correlation matrix; unit diagonal; rows with
+    ~zero variance correlate 0 off-diagonal."""
+    Xf = X.astype(jnp.float32)
+    mu = jnp.mean(Xf, axis=1, keepdims=True)
+    Z = Xf - mu
+    cov = Z @ Z.T / X.shape[1]
+    sd = jnp.sqrt(jnp.diag(cov))
+    denom = jnp.outer(sd, sd)
+    corr = jnp.where(denom > eps, cov / jnp.maximum(denom, eps), 0.0)
+    corr = jnp.clip(corr, -1.0, 1.0)
+    K = X.shape[0]
+    return corr * (1 - jnp.eye(K)) + jnp.eye(K)

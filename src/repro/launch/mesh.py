@@ -1,0 +1,24 @@
+"""Production mesh factory.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — crucial because the dry-run
+inflates the host platform to 512 placeholder devices and everything else
+(tests, benches, the CPU FL sim) must see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips — the ``pod`` axis is
+    the federation axis (DESIGN.md §3)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU tests of the same code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,84 @@
+"""Serving driver: prefill -> decode loop with batched requests.
+
+``states_from_prefill`` converts the raw per-layer prefill states into
+decode-ready caches (capacity padding / sliding-window ring placement),
+so ``generate`` can run prefill once and then step token-by-token.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import blocks as B
+
+
+def _attn_cache_from_prefill(cfg, k, v, capacity: int):
+    """k/v: (runL, Bt, S, Kv, D) raw prefill keys/values -> ring cache of
+    size C = min(window or capacity, capacity) with correct slot layout."""
+    S = k.shape[2]
+    C = min(cfg.window_size, capacity) if cfg.window_size > 0 else capacity
+    if S >= C:
+        # keep the last C tokens; token j lives at slot j % C
+        last_k, last_v = k[:, :, S - C :], v[:, :, S - C :]
+        shift = (S - C) % C
+        ck = jnp.roll(last_k, shift, axis=2)
+        cv = jnp.roll(last_v, shift, axis=2)
+    else:
+        pad = C - S
+        zeros = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], k.dtype)
+        ck = jnp.concatenate([k, zeros], axis=2)
+        cv = jnp.concatenate([v, zeros], axis=2)
+    length = jnp.full((k.shape[0],), S, jnp.int32)
+    return {"k": ck, "v": cv, "length": length}
+
+
+def states_from_prefill(cfg: ModelConfig, states, seq_len: int, capacity: int):
+    """Convert ``model.prefill`` states to decode states with ``capacity``."""
+    out = []
+    for (mtype, _n), st in zip(B.runs(cfg), states):
+        if mtype == "attn":
+            out.append(_attn_cache_from_prefill(cfg, st["k"], st["v"], capacity))
+        else:
+            out.append(st)  # recurrent states carry over as-is
+    return tuple(out)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    batch,
+    max_new_tokens: int = 16,
+    capacity: Optional[int] = None,
+    greedy: bool = True,
+    rng: Optional[jax.Array] = None,
+):
+    """Prefill on ``batch`` then decode ``max_new_tokens`` greedily.
+    Returns (tokens (B, max_new_tokens), final states)."""
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    tokens_in = batch["tokens"]
+    Bt = tokens_in.shape[0]
+    S = tokens_in.shape[1] + (cfg.num_patch_tokens if cfg.family == "vlm" else 0)
+    capacity = capacity or (S + max_new_tokens)
+
+    logits_last, raw_states = M.prefill(params, cfg, batch)
+    states = states_from_prefill(cfg, raw_states, S, capacity)
+
+    def pick(logits, key):
+        if greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    tok = pick(logits_last, rng)
+    outs = [tok]
+    pos = jnp.full((Bt,), S, jnp.int32)
+    for i in range(max_new_tokens - 1):
+        rng, sub = jax.random.split(rng)
+        logits, states = M.decode_step(params, cfg, states, tok, pos + i)
+        tok = pick(logits, sub)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1), states

@@ -1,0 +1,120 @@
+"""Program builders for the dry-run and drivers: train_step / prefill_step /
+serve_step per (arch config, input shape), plus ShapeDtypeStruct input specs
+(shardable, weak-type-correct, no device allocation).
+
+train_step carries the SCAFFOLD drift correction (c_global - c_local added
+to the gradient before the optimizer): at pod scale each FL client *is* a
+pod, so the corrected local step is the program that runs between
+communication rounds (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.optim import adam
+from repro.optim.sgd import apply_updates
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch structs for a train/prefill program."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_patch_tokens
+        assert s_text > 0, (cfg.name, shape.name)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((B, cfg.num_patch_tokens, M.D_VIT), f32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, M.D_FEAT), f32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    """(states, tokens, pos) structs for a serve_step program. The KV cache
+    capacity is the shape's seq_len (decode = ONE new token against it)."""
+    B, S = shape.global_batch, shape.seq_len
+    states = jax.eval_shape(lambda: M.init_decode(cfg, B, S))
+    return (
+        states,
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _moment_dtype(cfg):
+    return jnp.dtype(getattr(cfg, "opt_moments", "float32"))
+
+
+def train_state_structs(cfg: ModelConfig, lr: float = 1e-4):
+    params = param_structs(cfg)
+    opt_init, _ = adam(lr, moment_dtype=_moment_dtype(cfg))
+    opt_state = jax.eval_shape(opt_init, params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-4, scaffold: bool = True,
+                    remat: bool = True):
+    opt_init, opt_update = adam(lr, moment_dtype=_moment_dtype(cfg))
+
+    if scaffold:
+        def train_step(params, opt_state, c_global, c_local, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+            )(params)
+            grads = jax.tree_util.tree_map(
+                lambda g, cg, cl: g + (cg - cl).astype(g.dtype),
+                grads, c_global, c_local,
+            )
+            updates, opt_state = opt_update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, metrics
+    else:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+            )(params)
+            updates, opt_state = opt_update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, states, tokens, pos):
+        return M.decode_step(params, cfg, states, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,11 @@
+from repro.models.model import (
+    init_params,
+    forward,
+    loss_fn,
+    prefill,
+    init_decode,
+    decode_step,
+    D_VIT,
+    D_FEAT,
+)
+from repro.models.cnn import cnn_init, cnn_forward, cnn_loss, cnn_accuracy

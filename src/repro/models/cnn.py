@@ -1,0 +1,69 @@
+"""The paper's CNN for (synthetic) MNIST — pure JAX (lax.conv)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cnn_init(rng, cfg):
+    ks = jax.random.split(rng, 2 + len(cfg.conv_features) )
+    params = {}
+    c_in = cfg.channels
+    spatial = cfg.image_size
+    for i, c_out in enumerate(cfg.conv_features):
+        fan_in = cfg.kernel_size * cfg.kernel_size * c_in
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(ks[i], (cfg.kernel_size, cfg.kernel_size, c_in, c_out), jnp.float32)
+            / np.sqrt(fan_in),
+            "b": jnp.zeros((c_out,), jnp.float32),
+        }
+        c_in = c_out
+        spatial = spatial // 2  # max-pool /2 per conv block
+    flat = spatial * spatial * c_in
+    params["fc1"] = {
+        "w": jax.random.normal(ks[-2], (flat, cfg.hidden), jnp.float32) / np.sqrt(flat),
+        "b": jnp.zeros((cfg.hidden,), jnp.float32),
+    }
+    params["fc2"] = {
+        "w": jax.random.normal(ks[-1], (cfg.hidden, cfg.num_classes), jnp.float32)
+        / np.sqrt(cfg.hidden),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, cfg, x):
+    """x: (B, H, W, C) f32 -> logits (B, num_classes)."""
+    for i in range(len(cfg.conv_features)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + p["b"]
+        x = jax.nn.relu(x)
+        x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params, cfg, batch):
+    logits = cnn_forward(params, cfg, batch["x"])
+    labels = batch["y"]
+    lf = logits.astype(jnp.float32)
+    nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(lf, labels[:, None], 1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cnn_accuracy(params, cfg, x, y, batch: int = 512):
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = cnn_forward(params, cfg, x[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / len(x)

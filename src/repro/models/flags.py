@@ -1,0 +1,13 @@
+"""Trace-time flags.
+
+UNROLL_SCANS: when True, the layer-stack scan and the attention/mLSTM
+query-block scans fully unroll (lax.scan(unroll=True)) so XLA's
+cost_analysis counts every iteration — used ONLY by the dry-run costing
+path (cost_analysis counts a while-loop body once; see EXPERIMENTS.md
+§Methodology). The sLSTM time scan never unrolls (O(seq_len) bodies).
+"""
+UNROLL_SCANS = False
+
+
+def scan_unroll():
+    return True if UNROLL_SCANS else 1

@@ -1,0 +1,224 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM training/prefill uses the *parallel form*: an attention-like score
+matrix reweighted by cumulative exponential forget/input gates with the
+max-stabilizer from the paper. Like our attention, it scans over query
+blocks so the materialized (q_blk, T) weight matrix stays bounded — the
+chunkwise-recurrent formulation is a recorded hillclimb candidate.
+Decode carries the (C, n, m) recurrent state: C (B,H,Dk,Dv) matrix memory.
+
+sLSTM has a true nonlinear recurrence (recurrent matrix R on h_{t-1}), so
+it runs as ``lax.scan`` over time — not parallelizable by construction
+(paper §2.1); state is (c, n, h, m) each (B, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import flags as FLAGS
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Q_BLOCK = 512
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    ks = jax.random.split(key, 7)
+    D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], D, H * Dh, dtype),
+        "wk": dense_init(ks[1], D, H * Dh, dtype),
+        "wv": dense_init(ks[2], D, H * Dh, dtype),
+        "w_igate": dense_init(ks[3], D, H, jnp.float32, scale=0.01),
+        "w_fgate": dense_init(ks[4], D, H, jnp.float32, scale=0.01),
+        "b_fgate": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "w_ogate": dense_init(ks[5], D, H * Dh, dtype),
+        "head_norm": rmsnorm_init(Dh, dtype),
+        "w_out": dense_init(ks[6], H * Dh, D, dtype,
+                            scale=1.0 / np.sqrt(H * Dh) / np.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg, x):
+    B, S, _ = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, H, Dh) / np.sqrt(Dh)
+    v = (x @ params["wv"]).reshape(B, S, H, Dh)
+    log_i = (x.astype(jnp.float32) @ params["w_igate"])  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ params["w_fgate"] + params["b_fgate"]
+    )
+    return q, k, v, log_i, log_f
+
+
+def mlstm_fwd(params, cfg, x, positions=None, return_state: bool = False):
+    """Parallel (training) form, scanned over query blocks."""
+    B, S, _ = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, cfg, x)
+    F_cum = jnp.cumsum(log_f, axis=1)  # (B,S,H): sum_{s<=t} log f_s
+
+    # weight(t, j) = exp(F_t - F_j + log_i_j) for j <= t  (per batch, head)
+    q_blk = min(Q_BLOCK, S)
+    if S % q_blk != 0:
+        q_blk = S
+    n_blk = S // q_blk
+    t_idx = jnp.arange(S)
+
+    def body(_, blk):
+        qb, Fb, pos_b = blk  # (B,qb,H,Dh), (B,qb,H), (qb,)
+        # log weights (B, H, qb, S)
+        # weight of step j at time t: exp(F_t - F_j + log_i_j), F = cumsum(log_f)
+        lw = (
+            Fb.transpose(0, 2, 1)[:, :, :, None]
+            - F_cum.transpose(0, 2, 1)[:, :, None, :]
+            + log_i.transpose(0, 2, 1)[:, :, None, :]
+        )
+        causal = t_idx[None, :] <= pos_b[:, None]  # (qb, S)
+        lw = jnp.where(causal[None, None], lw, -1e30)
+        m = jnp.maximum(jnp.max(lw, axis=-1, keepdims=True), -1e30)  # (B,H,qb,1)
+        d = jnp.exp(lw - m)  # stabilized decay matrix
+        scores = jnp.einsum(
+            "bqhd,bthd->bhqt", qb.astype(jnp.float32), k.astype(jnp.float32)
+        )
+        wsc = scores * d
+        num = jnp.einsum("bhqt,bthd->bqhd", wsc, v.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.sum(wsc, axis=-1)).transpose(0, 2, 1)[..., None],
+            jnp.exp(-m).transpose(0, 2, 1, 3),
+        )  # (B,qb,H,1)
+        return (), num / den
+
+    qs = q.reshape(B, n_blk, q_blk, H, Dh).transpose(1, 0, 2, 3, 4)
+    Fs = F_cum.reshape(B, n_blk, q_blk, H).transpose(1, 0, 2, 3)
+    pos_blocks = t_idx.reshape(n_blk, q_blk)
+    _, outs = jax.lax.scan(body, (), (qs, Fs, pos_blocks), unroll=FLAGS.scan_unroll())
+    h = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+    h = rmsnorm(params["head_norm"], h.astype(x.dtype))
+    o = jax.nn.sigmoid((x @ params["w_ogate"]).astype(jnp.float32)).astype(x.dtype)
+    y = (h.reshape(B, S, H * Dh) * o) @ params["w_out"]
+    if return_state:
+        # fold the whole prefix into the recurrent state for decode
+        state = _mlstm_fold_state(cfg, k, v, log_i, log_f)
+        return y, state
+    return y
+
+
+def _mlstm_fold_state(cfg, k, v, log_i, log_f):
+    B, S, H, Dh = k.shape
+    F_cum = jnp.cumsum(log_f, axis=1)
+    F_tot = F_cum[:, -1]  # (B,H)
+    lw = F_tot[:, None] - F_cum + log_i  # weight of step j in state
+    m = jnp.max(lw, axis=1)  # (B,H)
+    w = jnp.exp(lw - m[:, None])  # (B,S,H)
+    C = jnp.einsum("bsh,bshk,bshv->bhkv", w, k.astype(jnp.float32), v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshk->bhk", w, k.astype(jnp.float32))
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(params, cfg, x, state, pos=None):
+    B = x.shape[0]
+    H, Dh = cfg.num_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B,H,Dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]  # (B,H)
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    C = state["C"] * f_sc[..., None] + i_sc[..., None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = state["n"] * f_sc + i_sc * k.astype(jnp.float32)
+
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32)))[..., None],
+        jnp.exp(-m_new)[..., None],
+    )
+    h = (num / den).astype(x.dtype)[:, None]  # (B,1,H,Dv)
+    h = rmsnorm(params["head_norm"], h)
+    o = jax.nn.sigmoid((x @ params["w_ogate"]).astype(jnp.float32)).astype(x.dtype)
+    y = (h.reshape(B, 1, H * Dh) * o) @ params["w_out"]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(cfg, batch: int):
+    H, Dh = cfg.num_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 9)
+    p = {"b_f": jnp.full((D,), 3.0, jnp.float32), "b_i": jnp.zeros((D,), jnp.float32)}
+    for name, kk in zip(["w_i", "w_f", "w_z", "w_o"], ks[:4]):
+        p[name] = dense_init(kk, D, D, dtype)
+    for name, kk in zip(["r_i", "r_f", "r_z", "r_o"], ks[4:8]):
+        p[name] = dense_init(kk, D, D, dtype, scale=0.5 / np.sqrt(D))
+    p["w_out"] = dense_init(ks[8], D, D, dtype,
+                            scale=1.0 / np.sqrt(D) / np.sqrt(2 * cfg.num_layers))
+    return p
+
+
+def _slstm_cell(params, x_t, state):
+    """x_t (B,D); state dict of (B,D) f32."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    hd = h.astype(x_t.dtype)
+    zi = (x_t @ params["w_i"] + hd @ params["r_i"]).astype(jnp.float32) + params["b_i"]
+    zf = (x_t @ params["w_f"] + hd @ params["r_f"]).astype(jnp.float32) + params["b_f"]
+    zz = (x_t @ params["w_z"] + hd @ params["r_z"]).astype(jnp.float32)
+    zo = (x_t @ params["w_o"] + hd @ params["r_o"]).astype(jnp.float32)
+
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, zi)
+    i_sc = jnp.exp(zi - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(zz)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_fwd(params, cfg, x, positions=None, return_state: bool = False):
+    B, S, D = x.shape
+    state0 = slstm_init_state(cfg, B)
+
+    def step(state, x_t):
+        new = _slstm_cell(params, x_t, state)
+        return new, new["h"]
+
+    state, hs = jax.lax.scan(step, state0, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ params["w_out"]
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_decode(params, cfg, x, state, pos=None):
+    new = _slstm_cell(params, x[:, 0], state)
+    y = new["h"][:, None].astype(x.dtype) @ params["w_out"]
+    return y, new
+
+
+def slstm_init_state(cfg, batch: int):
+    D = cfg.d_model
+    z = lambda: jnp.zeros((batch, D), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, D), -1e30, jnp.float32)}

@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd
+from repro.optim.adam import adam, adamw

@@ -1,0 +1,43 @@
+"""SGD (+momentum) as an (init, update) pair over pytrees.
+
+Mirrors the optax GradientTransformation interface without the dependency —
+the FL core threads optimizer state through scan/vmap, so the state must be
+a plain pytree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: object  # pytree like params, or () when momentum == 0
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    use_mom = momentum != 0.0
+
+    def init(params):
+        if not use_mom:
+            return SGDState(momentum=())
+        return SGDState(momentum=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        if not use_mom:
+            updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+            return updates, state
+        new_mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state.momentum, grads
+        )
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, new_mom)
+        return updates, SGDState(momentum=new_mom)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )

@@ -1,0 +1,147 @@
+"""Sharding rules: param/batch/decode-state PartitionSpecs per (arch, shape,
+mesh).
+
+Scheme (DESIGN.md §3/§5): 2D "FSDP + tensor parallel" —
+  * every matmul weight shards its output-feature dim over ``model`` and its
+    input-feature dim over ``data`` (output projections reversed), so
+    weights + Adam state are fully sharded over the whole mesh and XLA
+    all-gathers the ``data`` shards per layer inside the scan;
+  * MoE expert weights shard the expert dim over ``model`` (expert
+    parallelism) and d_model over ``data``;
+  * batch dims shard over (``pod``, ``data``); the ``pod`` axis is the
+    federation axis — params are replicated across pods (every FL client
+    starts each round from the global model);
+  * decode KV caches shard batch over ``data`` and the cache sequence dim
+    over ``model`` (GQA kv-heads < 16 makes head-sharding impossible), and
+    over both axes when global_batch == 1 (long_500k).
+
+Dims smaller than the mesh axis stay replicated (no degenerate shardings);
+GSPMD tolerates non-divisible dims by padding (e.g. 56 heads over 16).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weight leaves whose LAST dim is d_model (output projections): transpose rule
+_OUT_PROJ = {"wo", "w_down", "w_out"}
+# small/1D leaves stay replicated (norm scales, biases, gate vectors, lam)
+_REPLICATED = {"scale", "b_fgate", "b_f", "b_i", "lam", "b"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _maybe(dim_size: int, axis: Optional[str], mesh: Mesh):
+    """Use the axis only if the dim divides evenly (jit in_shardings demand
+    exact divisibility for *inputs*; odd dims — e.g. vocab 49155, 504 —
+    stay replicated on that axis)."""
+    if axis is None:
+        return None
+    n = _axis_size(mesh, axis)
+    return axis if (dim_size >= n and dim_size % n == 0) else None
+
+
+def _leaf_name(path) -> str:
+    names = [getattr(p, "key", None) for p in path]
+    return str([n for n in names if n is not None][-1]) if names else ""
+
+
+def param_specs(cfg, params, mesh: Mesh):
+    """PartitionSpec pytree matching ``params`` (stacked-run layout)."""
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = leaf.ndim
+        if name in _REPLICATED or nd <= 1:
+            return P()
+        # identify the two feature dims (ignore leading stack dims: the
+        # run-stack L axis and the MoE expert axis)
+        if name == "embed":  # (V, D)
+            return P(_maybe(shape[0], "model", mesh), _maybe(shape[1], "data", mesh))
+        if name == "lm_head":  # (D, V)
+            return P(_maybe(shape[0], "data", mesh), _maybe(shape[1], "model", mesh))
+        if name == "router":  # (L, D, E) — replicated E (small), shard D
+            return P(None, _maybe(shape[1], "data", mesh), None)
+        if name in ("w_gate", "w_up", "w_down") and nd == 4:
+            # MoE expert stacks (L, E, D, F)/(L, E, F, D): expert-parallel
+            return P(
+                None,
+                _maybe(shape[1], "model", mesh),
+                _maybe(shape[2], "data", mesh),
+                None,
+            )
+        if name == "conv":  # (L, W, Dr)
+            return P(None, None, _maybe(shape[-1], "model", mesh))
+        # generic matmul weights, possibly with a leading (L,) stack dim
+        lead = (None,) * (nd - 2)
+        d_in, d_out = shape[-2], shape[-1]
+        if name in _OUT_PROJ:
+            return P(*lead, _maybe(d_in, "model", mesh), _maybe(d_out, "data", mesh))
+        return P(*lead, _maybe(d_in, "data", mesh), _maybe(d_out, "model", mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(cfg, shape, mesh: Mesh, global_batch: Optional[int] = None):
+    """PartitionSpecs for the input batch of a train/prefill step."""
+    gb = global_batch if global_batch is not None else shape.global_batch
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # drop batch sharding if the batch doesn't cover the axes
+    if gb < int(np.prod([_axis_size(mesh, a) for a in baxes])):
+        baxes = ()
+    b = baxes if baxes else None
+    if cfg.family == "vlm":
+        return {"tokens": P(b, None), "patch_embeds": P(b, None, None)}
+    if cfg.family == "audio":
+        return {"frames": P(b, None, None), "labels": P(b, None)}
+    return {"tokens": P(b, None)}
+
+
+def decode_state_specs(cfg, states_shape_tree, shape, mesh: Mesh):
+    """PartitionSpecs for stacked decode states (leading run-stack axis).
+
+    KV caches (k/v, 5D: run, B, C, Kv, D): B over data when it covers the
+    axis, cache dim C over model (plus data when B is unsharded).
+    Recurrent states: batch over data, feature dim over model."""
+    gb = shape.global_batch
+    data_ok = gb >= _axis_size(mesh, "data")
+    b_axis = "data" if data_ok else None
+    seq_axes = ("model",) if data_ok else ("data", "model")
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("k", "v") and nd == 5:  # (run, B, C, Kv, D)
+            return P(None, b_axis, seq_axes, None, None)
+        if name == "length":
+            return P(None)
+        if name == "C" and nd == 5:  # mlstm matrix memory (run, B, H, Dk, Dv)
+            # small constant-size state: shard batch only — sharding Dk would
+            # force a resharding inside the decode einsum (observed SPMD
+            # involuntary-remat warnings)
+            return P(None, b_axis, None, None, None)
+        if name == "conv" and nd == 4:  # rglru conv ring (run, B, W-1, Dr)
+            return P(None, b_axis, None, _maybe(leaf.shape[3], "model", mesh))
+        if nd >= 3:  # (run, B, feat...) recurrent vectors
+            return P(
+                None, b_axis, *(
+                    [_maybe(leaf.shape[2], "model", mesh)] + [None] * (nd - 3)
+                )
+            )
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, states_shape_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,15 @@
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_weighted_sum,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_cast,
+    tree_all_finite,
+)
+from repro.utils.registry import Registry

@@ -1,0 +1,85 @@
+"""Pytree arithmetic helpers used across the FL core and optimizers.
+
+Everything here is jit-safe (pure jax.tree_util + jnp) and shape-preserving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i] over a list of pytrees."""
+    def _ws(*leaves):
+        out = leaves[0] * weights[0]
+        for w, leaf in zip(weights[1:], leaves[1:]):
+            out = out + w * leaf
+        return out
+
+    return jax.tree_util.tree_map(_ws, *trees)
+
+
+def tree_dot(a, b):
+    """Inner product of two pytrees (float32 accumulation)."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_size(tree) -> int:
+    """Total number of elements (static)."""
+    return int(
+        sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_all_finite(tree):
+    parts = jax.tree_util.tree_map(lambda x: jnp.all(jnp.isfinite(x)), tree)
+    return jax.tree_util.tree_reduce(jnp.logical_and, parts, jnp.bool_(True))
+
+
+def tree_flatten_to_vector(tree, dtype=jnp.float32):
+    """Concatenate all leaves of a pytree into one flat vector.
+
+    Deterministic leaf order (tree_flatten order). Used to build the
+    per-client parameter vectors the Pearson correlation runs over.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([x.reshape(-1).astype(dtype) for x in leaves])
+
+
+def tree_unflatten_from_vector(vec, tree):
+    """Inverse of tree_flatten_to_vector given a template ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,49 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.models import init_params
+
+
+def test_roundtrip_nested(tmp_path, rng):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.int32), "d": jnp.zeros((5,), jnp.bfloat16)},
+    }
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, tree, step=7)
+    loaded, step = load_pytree(p, tree)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path, rng):
+    cfg = get_config("xlstm-125m").reduced()
+    params = init_params(rng, cfg)
+    p = str(tmp_path / "model.npz")
+    save_pytree(p, params)
+    loaded, step = load_pytree(p, params)
+    assert step is None
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(loaded)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((3,))}
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, tree)
+    with pytest.raises(ValueError):
+        load_pytree(p, {"a": jnp.zeros((4,))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    tree = {"a": jnp.zeros((3,))}
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, tree)
+    with pytest.raises(KeyError):
+        load_pytree(p, {"a": jnp.zeros((3,)), "b": jnp.zeros((1,))})

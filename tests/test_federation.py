@@ -1,0 +1,210 @@
+"""Integration tests for the federated simulator + the paper's merging
+mechanism, on a fast toy task (linear model on gaussian blobs) so each
+round is milliseconds. The CNN/MNIST paper experiment runs in benchmarks/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AlgoConfig, FederatedSimulator, FLConfig, Scenario
+from repro.data.faults import PacketLoss
+
+NUM_CLASSES, DIM, NUM_CLIENTS = 4, 8, 8
+
+
+_CENTERS = np.random.default_rng(42).normal(size=(NUM_CLASSES, DIM)) * 3
+
+
+def _blobs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, NUM_CLASSES, n)
+    x = _CENTERS[y] + rng.normal(size=(n, DIM))
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def _init(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (DIM, NUM_CLASSES)) * 0.01,
+        "b": jnp.zeros((NUM_CLASSES,)),
+    }
+
+
+def _loss(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32), 1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def _acc(params, x, y):
+    logits = x @ np.asarray(params["w"]) + np.asarray(params["b"])
+    return float((logits.argmax(-1) == y).mean())
+
+
+def _shards(seed=0, poison_ids=(), n_per=200):
+    """Non-IID: each client sees 2 of the 4 classes."""
+    rng = np.random.default_rng(seed)
+    x, y = _blobs(NUM_CLIENTS * n_per, seed)
+    shards = []
+    for i in range(NUM_CLIENTS):
+        classes = [(i % NUM_CLASSES), ((i + 1) % NUM_CLASSES)]
+        idx = np.flatnonzero(np.isin(y, classes))[:n_per]
+        yy = y[idx].copy()
+        if i in poison_ids:
+            yy = (yy + 1) % NUM_CLASSES  # label flip
+        shards.append((x[idx], yy))
+    return shards
+
+
+def _sim(scenario=None, merge=True, rounds=6, algo="scaffold", seed=0,
+         poison_ids=(), threshold=0.6):
+    x_te, y_te = _blobs(500, seed + 99)
+    fl = FLConfig(
+        algo=AlgoConfig(algorithm=algo, lr_local=0.1),
+        num_rounds=rounds,
+        local_epochs=2,
+        steps_per_epoch=5,
+        batch_size=16,
+        merge_enabled=merge,
+        merge_round=2,
+        threshold=threshold,
+        seed=seed,
+    )
+    return FederatedSimulator(
+        init_params_fn=_init,
+        loss_fn=_loss,
+        eval_fn=lambda p: _acc(p, x_te, y_te),
+        client_shards=_shards(seed, poison_ids),
+        fl=fl,
+        scenario=scenario or Scenario(),
+    )
+
+
+def test_accuracy_improves_over_rounds():
+    sim = _sim()
+    hist = sim.run()
+    assert hist[-1].accuracy > 0.9
+    assert hist[-1].accuracy >= hist[0].accuracy
+    assert hist[-1].mean_loss < hist[0].mean_loss
+
+
+def test_merge_reduces_active_nodes_and_bytes():
+    sim = _sim(threshold=0.3)
+    hist = sim.run()
+    before = hist[1]
+    after = hist[-1]
+    assert before.active_nodes == NUM_CLIENTS
+    assert after.active_nodes < NUM_CLIENTS          # merging happened
+    assert after.bytes_sent < before.bytes_sent      # comm savings
+    assert hist[2].merged_groups                     # at merge_round=2
+    # accuracy survives the merge
+    assert after.accuracy > 0.75
+
+
+def test_merge_disabled_keeps_all_nodes():
+    sim = _sim(merge=False)
+    hist = sim.run()
+    assert all(r.active_nodes == NUM_CLIENTS for r in hist)
+    assert all(not r.merged_groups for r in hist)
+
+
+def test_merging_preserves_total_data_weight():
+    sim = _sim(threshold=0.3)
+    total_before = float(sim.weights.sum())
+    sim.run()
+    assert float(sim.weights.sum()) == pytest.approx(total_before)
+
+
+def test_packet_loss_scenario_runs():
+    sc = Scenario(name="packet_loss",
+                  packet_loss=PacketLoss(prob=0.8, affected_frac=0.5, seed=0))
+    hist = _sim(scenario=sc).run()
+    assert hist[-1].accuracy > 0.6  # degraded but learning
+
+
+def test_drop_mode_reduces_updates_sent():
+    sc = Scenario(name="drop",
+                  packet_loss=PacketLoss(prob=1.0, drop_update=True,
+                                         affected_frac=0.5, seed=0))
+    hist = _sim(scenario=sc, merge=False).run()
+    assert any(r.updates_sent < NUM_CLIENTS for r in hist)
+
+
+def test_poisoning_merging_dilutes_attack():
+    """The paper's core claim, on the toy task: with label-flipped clients,
+    the merged run should do at least as well as the unmerged run."""
+    poison = (0, 1)
+    accs = {}
+    for merge in (True, False):
+        hist = _sim(merge=merge, rounds=8, poison_ids=poison, threshold=0.5,
+                    seed=3).run()
+        accs[merge] = np.mean([r.accuracy for r in hist[-3:]])
+    assert accs[True] >= accs[False] - 0.03, accs
+
+
+def test_model_poison_scenario():
+    sc = Scenario(name="mp", model_poison={0: -1.0})
+    hist = _sim(scenario=sc).run()
+    assert hist[-1].accuracy > 0.6  # survives one sign-flipping client
+
+
+def test_network_delay_stale_updates():
+    """Delayed clients' updates are excluded from their round and arrive
+    (weighted) later; learning still converges."""
+    from repro.data.faults import NetworkDelay
+    sc = Scenario(name="delay",
+                  network_delay=NetworkDelay(max_delay=2, affected_frac=0.5, seed=1))
+    sim = _sim(scenario=sc, rounds=8)
+    hist = sim.run()
+    # some rounds dropped updates (delayed clients excluded)
+    assert any(r.updates_sent < NUM_CLIENTS for r in hist)
+    assert hist[-1].accuracy > 0.8
+    assert not sim._stale or all(s[0] > len(hist) - 1 for s in sim._stale)
+
+
+def test_periodic_remerging():
+    """merge_rounds triggers additional merge passes among active nodes."""
+    sim = _sim(threshold=0.3)
+    sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "merge_rounds": (4,)})
+    hist = sim.run()
+    n2 = hist[2].active_nodes   # after first merge (merge_round=2)
+    n4 = hist[4].active_nodes   # after re-merge
+    assert n2 < NUM_CLIENTS
+    assert n4 <= n2
+
+
+def test_kernel_pearson_path_equivalent():
+    """use_kernel_pearson routes through the Pallas kernel and produces the
+    same merge groups as the oracle path."""
+    sims = {}
+    for use_kernel in (False, True):
+        sim = _sim(threshold=0.3, seed=5)
+        sim.fl = sim.fl.__class__(**{**sim.fl.__dict__,
+                                     "use_kernel_pearson": use_kernel})
+        hist = sim.run()
+        sims[use_kernel] = [r.merged_groups for r in hist]
+    assert sims[False] == sims[True]
+
+
+def test_corr_subsample_same_groups():
+    """Coordinate-subsampled correlation reproduces the merge plan."""
+    sims = {}
+    for n in (0, 500):
+        sim = _sim(threshold=0.3, seed=7)
+        sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "corr_sample": n})
+        hist = sim.run()
+        sims[n] = [r.merged_groups for r in hist]
+    assert sims[0] == sims[500]
+
+
+def test_partial_participation():
+    """participation=0.5 samples half the active clients per round; the
+    model still learns."""
+    sim = _sim(rounds=8)
+    sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "participation": 0.5})
+    hist = sim.run()
+    # sampling is vs the round's PRE-merge active set, so bound by K/2 + 1
+    assert all(r.updates_sent <= NUM_CLIENTS // 2 + 1 for r in hist)
+    assert any(r.updates_sent < r.active_nodes for r in hist)
+    assert hist[-1].accuracy > 0.8

@@ -1,0 +1,138 @@
+"""Unit + hypothesis property tests for the paper's merging algorithm."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merging import (
+    apply_merge,
+    build_merge_plan,
+    merge_clients,
+    merged_data_sizes,
+)
+
+
+def _sym_corr(rng, K):
+    A = rng.uniform(-1, 1, (K, K))
+    corr = (A + A.T) / 2
+    np.fill_diagonal(corr, 1.0)
+    return corr
+
+
+# ---------------------------------------------------------------------------
+# paper pseudocode semantics
+# ---------------------------------------------------------------------------
+
+
+def test_pairs_merge_exactly_like_paper():
+    corr = np.eye(4)
+    corr[0, 1] = corr[1, 0] = 0.9
+    corr[2, 3] = corr[3, 2] = 0.8
+    groups, unmerged = merge_clients(corr, threshold=0.7, max_group_size=3)
+    assert groups == [[0, 1], [2, 3]]
+    assert unmerged == []
+
+
+def test_max_group_size_respected():
+    corr = np.ones((5, 5))
+    groups, unmerged = merge_clients(corr, threshold=0.5, max_group_size=3)
+    assert groups == [[0, 1, 2], [3, 4]]
+    assert unmerged == []
+
+
+def test_no_similarity_all_unmerged():
+    corr = np.eye(6)
+    groups, unmerged = merge_clients(corr, threshold=0.7)
+    assert groups == []
+    assert sorted(unmerged) == list(range(6))
+
+
+def test_greedy_order_first_seed_wins():
+    """Node 1 correlates with 0 and 2; 0 seeds first and consumes 1."""
+    corr = np.eye(3)
+    corr[0, 1] = corr[1, 0] = 0.9
+    corr[1, 2] = corr[2, 1] = 0.95
+    groups, unmerged = merge_clients(corr, threshold=0.7)
+    assert groups == [[0, 1]]
+    assert unmerged == [2]
+
+
+def test_inactive_nodes_excluded():
+    corr = np.ones((4, 4))
+    active = np.array([True, False, True, True])
+    groups, unmerged = merge_clients(corr, 0.5, 3, active=active)
+    assert all(1 not in g for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    K=st.integers(2, 12),
+    threshold=st.floats(0.0, 1.0),
+    max_group=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_partition_invariants(K, threshold, max_group, seed):
+    rng = np.random.default_rng(seed)
+    corr = _sym_corr(rng, K)
+    groups, unmerged = merge_clients(corr, threshold, max_group)
+    flat = [i for g in groups for i in g] + list(unmerged)
+    # every node appears exactly once (partition)
+    assert sorted(flat) == list(range(K))
+    # group sizes within (1, max_group]
+    assert all(1 < len(g) <= max_group for g in groups)
+    # every member correlates with its seed above threshold
+    for g in groups:
+        seed_node = g[0]
+        assert all(corr[seed_node, j] >= threshold for j in g[1:])
+
+
+@settings(max_examples=100, deadline=None)
+@given(K=st.integers(2, 10), seed=st.integers(0, 10_000))
+def test_merge_plan_row_stochastic(K, seed):
+    rng = np.random.default_rng(seed)
+    corr = _sym_corr(rng, K)
+    sizes = rng.integers(1, 100, K)
+    plan = build_merge_plan(corr, sizes, threshold=0.5, max_group_size=3)
+    W = plan.W
+    # active rows sum to 1 (convex combination), retired rows to 0
+    np.testing.assert_allclose(W.sum(1), plan.active.astype(float), atol=1e-6)
+    assert np.all(W >= 0)
+    # data conservation: merged sizes sum to total
+    assert merged_data_sizes(plan, sizes).sum() == sizes.sum()
+
+
+@settings(max_examples=50, deadline=None)
+@given(K=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_apply_merge_convexity(K, seed):
+    """Merged params lie in the convex hull: min <= merged <= max of group."""
+    rng = np.random.default_rng(seed)
+    corr = _sym_corr(rng, K)
+    plan = build_merge_plan(corr, np.ones(K, int), threshold=0.4)
+    stacked = {"w": rng.normal(size=(K, 5)).astype(np.float32)}
+    merged = apply_merge(plan, stacked)
+    for g in plan.groups:
+        rep = g[0]
+        lo = np.min([stacked["w"][j] for j in g], axis=0) - 1e-5
+        hi = np.max([stacked["w"][j] for j in g], axis=0) + 1e-5
+        assert np.all(merged["w"][rep] >= lo) and np.all(merged["w"][rep] <= hi)
+    for i in plan.unmerged:
+        np.testing.assert_array_equal(merged["w"][i], stacked["w"][i])
+
+
+def test_determinism():
+    rng = np.random.default_rng(7)
+    corr = _sym_corr(rng, 10)
+    a = merge_clients(corr, 0.5, 3)
+    b = merge_clients(corr.copy(), 0.5, 3)
+    assert a == b
+
+
+def test_threshold_one_merges_only_perfect():
+    corr = np.eye(3)
+    corr[0, 1] = corr[1, 0] = 1.0
+    groups, unmerged = merge_clients(corr, threshold=1.0)
+    assert groups == [[0, 1]] and unmerged == [2]

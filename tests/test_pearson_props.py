@@ -1,0 +1,59 @@
+"""Hypothesis property tests for the Pearson correlation implementations
+(oracle + kernel agree on the mathematical invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.pearson import pearson_matrix
+from repro.kernels.pearson.ops import pearson_corr
+
+
+def _X(seed, K, M):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(K, M)).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), K=st.integers(2, 8), M=st.integers(10, 300))
+def test_symmetry_unit_diag_bounded(seed, K, M):
+    X = jnp.asarray(_X(seed, K, M))
+    for impl in (pearson_matrix, lambda x: pearson_corr(x, interpret=True)):
+        C = np.asarray(impl(X))
+        np.testing.assert_allclose(C, C.T, atol=1e-5)
+        np.testing.assert_allclose(np.diag(C), 1.0, atol=1e-5)
+        assert np.all(C <= 1.0 + 1e-5) and np.all(C >= -1.0 - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    scale=st.floats(0.1, 10.0),
+    shift=st.floats(-5.0, 5.0),
+)
+def test_affine_invariance(seed, scale, shift):
+    """PCC is invariant to positive affine transforms of any row."""
+    X = _X(seed, 4, 256)
+    X2 = X.copy()
+    X2[0] = scale * X2[0] + shift
+    a = np.asarray(pearson_matrix(jnp.asarray(X)))
+    b = np.asarray(pearson_matrix(jnp.asarray(X2)))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_kernel_matches_oracle_property(seed):
+    X = jnp.asarray(_X(seed, 6, 1024))
+    a = np.asarray(pearson_matrix(X))
+    b = np.asarray(pearson_corr(X, interpret=True))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_permutation_equivariance():
+    X = jnp.asarray(_X(0, 6, 512))
+    perm = np.array([3, 1, 5, 0, 2, 4])
+    C = np.asarray(pearson_matrix(X))
+    Cp = np.asarray(pearson_matrix(X[perm]))
+    np.testing.assert_allclose(Cp, C[np.ix_(perm, perm)], atol=1e-5)

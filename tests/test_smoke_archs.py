@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned arch
+(<=2 layers, d_model<=256, <=4 experts) runs one forward + one train step
+on CPU; output shapes + finiteness asserted. (Deliverable f.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import (
+    D_FEAT,
+    D_VIT,
+    decode_step,
+    forward,
+    init_decode,
+    init_params,
+    loss_fn,
+)
+from repro.optim import adam
+from repro.optim.sgd import apply_updates
+from repro.utils import tree_all_finite
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.random.randint(
+                rng, (B, S - cfg.num_patch_tokens), 0, cfg.vocab_size
+            ),
+            "patch_embeds": jax.random.normal(rng, (B, cfg.num_patch_tokens, D_VIT)),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(rng, (B, S, D_FEAT)),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_finite(arch, rng):
+    cfg = get_config(arch).reduced()
+    params = init_params(rng, cfg)
+    batch = _batch(cfg, rng)
+    logits, aux = forward(params, cfg, batch, remat=False)
+    seq = S if cfg.family != "vlm" else S  # patches + text = S total
+    assert logits.shape == (B, seq, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_finite(arch, rng):
+    cfg = get_config(arch).reduced()
+    params = init_params(rng, cfg)
+    batch = _batch(cfg, rng)
+    opt_init, opt_update = adam(1e-3)
+    opt_state = opt_init(params)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    assert tree_all_finite(grads)
+    updates, opt_state = opt_update(grads, opt_state, params)
+    new_params = apply_updates(params, updates)
+    assert tree_all_finite(new_params)
+    # loss decreases on the same batch after one step (sanity, not perf)
+    loss2, _ = loss_fn(new_params, cfg, batch)
+    assert float(loss2) < float(loss) + 1e-3
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    if not cfg.supports_decode:
+        pytest.skip("encoder-only: no decode (recorded in DESIGN.md)")
+    params = init_params(rng, cfg)
+    states = init_decode(cfg, B, 128)
+    tok = jnp.ones((B,), jnp.int32)
+    logits, states2 = decode_step(
+        params, cfg, states, tok, jnp.zeros((B,), jnp.int32)
+    )
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # states structurally preserved
+    assert jax.tree_util.tree_structure(states) == jax.tree_util.tree_structure(states2)
+
+
+def test_sliding_window_variant(rng):
+    """long_500k unlocks dense archs via the sliding-window variant."""
+    cfg = get_config("yi-34b")
+    var = cfg.decode_variant("long_500k")
+    assert var.window_size == 4096
+    red = dataclasses.replace(var.reduced(), window_size=16)
+    params = init_params(rng, red)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, red.vocab_size)}
+    logits, _ = forward(params, red, batch, remat=False)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))

@@ -1,0 +1,165 @@
+"""System-level behaviour: config registry, input specs, sharding rules,
+and a subprocess mini dry-run (4 fake devices so the 512-device inflation
+never leaks into this test process)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import steps as ST
+from repro.models import D_FEAT, D_VIT
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a and cfg.num_layers > 0
+
+
+def test_exact_assigned_dimensions():
+    """Configs match the assignment table exactly."""
+    table = {
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    }
+    for arch, (L, d, h, kv, ff, v) in table.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("granite-moe-1b-a400m").num_experts == 32
+    assert get_config("granite-moe-1b-a400m").experts_per_token == 8
+    assert get_config("llama4-maverick-400b-a17b").num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").experts_per_token == 1
+    assert get_config("qwen3-1.7b").qk_norm
+
+
+def test_shape_support_matrix():
+    """Skips per DESIGN.md: hubert (encoder-only) has no decode shapes."""
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES:
+            want = not (a == "hubert-xlarge" and s in ("decode_32k", "long_500k"))
+            assert cfg.supports_shape(s) == want, (a, s)
+
+
+def test_long_500k_variants():
+    for a in ("yi-34b", "granite-8b", "llava-next-34b"):
+        assert get_config(a).decode_variant("long_500k").window_size == 4096
+    # native sub-quadratic archs keep their structure
+    assert get_config("xlstm-125m").decode_variant("long_500k").window_size == 0
+    assert get_config("recurrentgemma-2b").decode_variant("long_500k").window_size == 2048
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode":
+        if not cfg.supports_shape(shape_name):
+            return
+        states, toks, pos = ST.decode_input_specs(cfg, shape)
+        assert toks.shape == (shape.global_batch,)
+        assert len(states) > 0
+    else:
+        specs = ST.input_specs(cfg, shape)
+        if cfg.family == "vlm":
+            assert specs["tokens"].shape[1] + cfg.num_patch_tokens == shape.seq_len
+            assert specs["patch_embeds"].shape == (
+                shape.global_batch, cfg.num_patch_tokens, D_VIT
+            )
+        elif cfg.family == "audio":
+            assert specs["frames"].shape == (
+                shape.global_batch, shape.seq_len, D_FEAT
+            )
+        else:
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+
+
+def test_reduced_configs_within_smoke_budget():
+    for a in ASSIGNED_ARCHS:
+        r = get_config(a).reduced()
+        assert r.num_layers <= 2 and r.d_model <= 512
+        if r.num_experts:
+            assert r.num_experts <= 4
+
+
+def test_param_specs_no_degenerate_shardings():
+    """Every spec'd axis divides its dim (jit in_shardings requirement)."""
+    from repro import sharding as SH
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sizes = {"data": 16, "model": 16}  # production sizes
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = sizes
+
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a).reduced()
+        params = ST.param_structs(cfg)
+        specs = SH.param_specs(cfg, params, FakeMesh())
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        pflat = jax.tree_util.tree_leaves(params)
+        for (path, spec), leaf in zip(flat, pflat):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([sizes[x] for x in axes]))
+                assert dim % n == 0, (a, path, leaf.shape, spec)
+
+
+def test_mini_dryrun_subprocess():
+    """Lower + compile a REDUCED arch on a (2,2) mesh in a subprocess
+    (XLA_FLAGS isolation)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, INPUT_SHAPES
+        from repro.launch import steps as ST
+        from repro import sharding as SH
+        import dataclasses
+        cfg = get_config("qwen3-1.7b").reduced()
+        shape = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=128, global_batch=4)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        with mesh:
+            params = ST.param_structs(cfg)
+            psh = SH.to_shardings(mesh, SH.param_specs(cfg, params, mesh))
+            bsh = SH.to_shardings(mesh, SH.batch_specs(cfg, shape, mesh))
+            params_s, opt_s = ST.train_state_structs(cfg)
+            from repro.optim.adam import AdamState
+            osh = AdamState(step=NamedSharding(mesh, P()),
+                            mu=psh, nu=psh)
+            step, _ = ST.make_train_step(cfg)
+            batch = ST.input_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=(psh, osh, psh, psh, bsh),
+                         out_shardings=(psh, osh, NamedSharding(mesh, P())))
+            compiled = fn.lower(params_s, opt_s, params_s, params_s, batch).compile()
+            assert compiled.cost_analysis()["flops"] > 0
+            print("MINI_DRYRUN_OK")
+    """)
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "TF_CPP_MIN_LOG_LEVEL": "3"},
+        cwd="/root/repo", timeout=300,
+    )
+    assert "MINI_DRYRUN_OK" in res.stdout, res.stderr[-2000:]
