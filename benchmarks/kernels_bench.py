@@ -20,7 +20,7 @@ PEAK = 197e12
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # single warmup call (works on pytrees)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

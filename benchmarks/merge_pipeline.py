@@ -1,0 +1,132 @@
+"""Merge-step pipeline benchmark: seed host path vs zero-copy device path.
+
+Compares, on a CNN-sim-scale stacked client pytree (K=10, M ~= 1e6):
+
+  correlate — materialized (K, M) concat + two-pass ``pearson_matrix``
+              vs. streaming per-leaf tree-Pearson (``pearson_tree``)
+  apply     — host numpy f64 ``apply_merge`` (device_get + rebuild)
+              vs. jitted donated ``apply_merge_device``
+
+and reports the end-to-end merge-step speedup plus the streaming-vs-oracle
+correlation error. Emits ``BENCH_merge.json`` next to the CWD.
+
+  PYTHONPATH=src python -m benchmarks.merge_pipeline
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merging import apply_merge, apply_merge_device, build_merge_plan
+from repro.core.pearson import client_param_matrix, pearson_matrix, pearson_tree
+
+K = 10
+
+
+def _stacked_tree(rng, k=K):
+    """CNN-shaped stacked client params, ~1e6 params per client; clients
+    0-3 share a basin (correlated), the rest are independent."""
+    shapes = {
+        "conv0": {"w": (3, 3, 1, 32), "b": (32,)},
+        "conv1": {"w": (3, 3, 32, 64), "b": (64,)},
+        "fc1": {"w": (3136, 256), "b": (256,)},
+        "fc2": {"w": (256, 10), "b": (10,)},
+        "pad": {"w": (64, 2709)},  # tops the tree up to ~1e6 params
+    }
+    base = jax.tree_util.tree_map(
+        lambda s: rng.normal(size=s).astype(np.float32),
+        shapes,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+    def client(i):
+        if i < 4:
+            return jax.tree_util.tree_map(
+                lambda x: x + 0.05 * rng.normal(size=x.shape).astype(np.float32),
+                base,
+            )
+        return jax.tree_util.tree_map(
+            lambda s: rng.normal(size=s).astype(np.float32),
+            shapes,
+            is_leaf=lambda s: isinstance(s, tuple),
+        )
+
+    clients = [client(i) for i in range(k)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *clients)
+
+
+def _time_ms(fn, iters=5):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def run(out_path: str = "BENCH_merge.json"):
+    rng = np.random.default_rng(0)
+    stacked = _stacked_tree(rng)
+    M = sum(int(np.prod(l.shape[1:])) for l in jax.tree_util.tree_leaves(stacked))
+
+    # --- correlate -------------------------------------------------------
+    def corr_host():
+        return np.asarray(pearson_matrix(client_param_matrix(stacked)))
+
+    def corr_stream():
+        return np.asarray(pearson_tree(stacked))
+
+    host_corr_ms = _time_ms(corr_host)
+    stream_corr_ms = _time_ms(corr_stream)
+    err = float(np.abs(corr_host() - corr_stream()).max())
+
+    plan = build_merge_plan(corr_host(), data_sizes=[1] * K, threshold=0.7)
+
+    # --- apply -----------------------------------------------------------
+    # host path includes what the simulator used to do mid-round:
+    # device_get the stacked tree, mix in f64 on host, push back to device
+    def apply_host():
+        return jax.tree_util.tree_map(
+            jnp.asarray, apply_merge(plan, jax.device_get(stacked))
+        )
+
+    # device path donates its input, so each timed call needs a fresh copy;
+    # time copy+apply and subtract the measured copy cost
+    def copy_only():
+        return jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), stacked)
+
+    def apply_device():
+        return apply_merge_device(plan, copy_only())
+
+    host_apply_ms = _time_ms(apply_host)
+    copy_ms = _time_ms(copy_only)
+    device_apply_ms = max(_time_ms(apply_device) - copy_ms, 1e-3)
+
+    host_total = host_corr_ms + host_apply_ms
+    device_total = stream_corr_ms + device_apply_ms
+    result = {
+        "K": K,
+        "M": M,
+        "pearson_host_ms": round(host_corr_ms, 3),
+        "pearson_stream_ms": round(stream_corr_ms, 3),
+        "apply_host_ms": round(host_apply_ms, 3),
+        "apply_device_ms": round(device_apply_ms, 3),
+        "merge_step_host_ms": round(host_total, 3),
+        "merge_step_device_ms": round(device_total, 3),
+        "speedup": round(host_total / device_total, 2),
+        "stream_vs_oracle_max_abs_err": err,
+        "groups": [list(g) for g in plan.groups],
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    for k, v in result.items():
+        print(f"{k},{v}")
+    print(f"-> {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

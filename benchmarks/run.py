@@ -44,6 +44,10 @@ def main() -> None:
     from benchmarks import kernels_bench
     kernels_bench.run()
 
+    _section("Merge pipeline — streaming/device vs materialized/host")
+    from benchmarks import merge_pipeline
+    merge_pipeline.run()
+
     _section("Roofline — single-pod baselines (deliverable g)")
     from benchmarks import roofline
     roofline.print_table("single")

@@ -1,9 +1,15 @@
-from repro.core.pearson import pearson_matrix, pearson_matrix_fast, client_param_matrix
+from repro.core.pearson import (
+    pearson_matrix,
+    pearson_matrix_fast,
+    pearson_tree,
+    client_param_matrix,
+)
 from repro.core.merging import (
     MergePlan,
     merge_clients,
     build_merge_plan,
     apply_merge,
+    apply_merge_device,
     merged_data_sizes,
 )
 from repro.core.scaffold import AlgoConfig, make_round_fn, init_controls

@@ -11,6 +11,7 @@ nodes"). Communication accounting reads the active mask.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -20,8 +21,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.merging import apply_merge, build_merge_plan, merged_data_sizes
-from repro.core.pearson import client_param_matrix, pearson_matrix
+from repro.core.merging import (
+    apply_merge,
+    apply_merge_device,
+    build_merge_plan,
+    merged_data_sizes,
+)
+from repro.core.pearson import client_param_matrix, pearson_matrix, pearson_tree
 from repro.core.scaffold import AlgoConfig, init_controls, make_round_fn
 from repro.data.faults import NetworkDelay, PacketLoss
 from repro.utils.pytree import tree_size
@@ -51,9 +57,16 @@ class FLConfig:
     # additional merge rounds (the paper's algorithm takes "number of merge
     # operations"); re-merging runs among the still-active nodes
     merge_rounds: Tuple[int, ...] = ()
-    # route the correlation through the streaming Pallas kernel
+    # route the streamed correlation chunks through the Pallas kernel
     # (interpret=True on CPU; the at-scale path)
     use_kernel_pearson: bool = False
+    # "device" (default): zero-copy streaming merge pipeline — per-leaf
+    # tree-Pearson, jitted merge-apply with donated buffers, on-device
+    # batch sampling; no (K, M) materialization, no mid-round device_get.
+    # "host": the original numpy oracle pipeline (materialized client
+    # matrix, f64 host merge-apply, numpy batch gather) kept for A/B
+    # parity tests and benchmarks.
+    pipeline: str = "device"
     seed: int = 0
 
     @property
@@ -95,6 +108,10 @@ class FederatedSimulator:
         fl: FLConfig,
         scenario: Optional[Scenario] = None,
     ):
+        if fl.pipeline not in ("device", "host"):
+            raise ValueError(
+                f"FLConfig.pipeline must be 'device' or 'host', got {fl.pipeline!r}"
+            )
         self.fl = fl
         self.scenario = scenario or Scenario()
         self.eval_fn = eval_fn
@@ -107,7 +124,12 @@ class FederatedSimulator:
         key = jax.random.PRNGKey(fl.seed)
         self.params = init_params_fn(key)
         self.c_global, self.c_locals = init_controls(self.params, self.K)
-        self.round_fn = jax.jit(make_round_fn(loss_fn, fl.algo))
+        # (params, c_global, c_locals) are donated: each round's state update
+        # reuses the previous round's HBM buffers instead of allocating and
+        # copying — the round loop holds no stale references (see run()).
+        self.round_fn = jax.jit(
+            make_round_fn(loss_fn, fl.algo), donate_argnums=(0, 1, 2)
+        )
 
         self.active = np.ones(self.K, np.float32)
         self.weights = np.asarray([len(y) for _, y in self.shards], np.float32)
@@ -129,11 +151,40 @@ class FederatedSimulator:
         self._stale: List[tuple] = []  # (arrival_round, cid, dx pytree)
 
         self._param_bytes = tree_size(self.params) * 4
+        self._batch_key = jax.random.PRNGKey(fl.seed)
+        if fl.pipeline == "device":
+            self._upload_shards()
 
     # ------------------------------------------------------------------
-    def _sample_batches(self):
-        """(K, steps, B, ...) batches drawn from each client's shard."""
+    def _upload_shards(self):
+        """Device-resident copy of the client shards in a flat concatenated
+        layout (rows of all clients back to back + per-client offset and
+        length), rebuilt only when shards change (init + merge). No
+        padding: total device memory is exactly the sum of shard rows.
+        Per-round batch sampling gathers from these on device — no
+        host->device transfer per round."""
+        self._shard_x = jnp.asarray(np.concatenate([x for x, _ in self.shards]))
+        self._shard_y = jnp.asarray(np.concatenate([y for _, y in self.shards]))
+        lens = np.asarray([len(y) for _, y in self.shards], np.int32)
+        self._shard_len = jnp.asarray(lens)
+        self._shard_off = jnp.asarray(
+            np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+        )
+
+    def _sample_batches(self, t: int):
+        """(K, steps, B, ...) batches drawn from each client's shard.
+
+        Device pipeline: a jitted jax.random gather over the flat
+        device-resident shards (uniform per client via its offset/length) —
+        the sampled batches never exist on host. Host pipeline: the
+        original per-round numpy gather + transfer (oracle)."""
         S, Bsz = self.fl.local_steps, self.fl.batch_size
+        if self.fl.pipeline == "device":
+            key = jax.random.fold_in(self._batch_key, t)
+            return _gather_batches(
+                key, self._shard_x, self._shard_y,
+                self._shard_off, self._shard_len, S, Bsz,
+            )
         xs, ys = [], []
         for x, y in self.shards:
             idx = self.rng.integers(0, len(y), size=(S, Bsz))
@@ -201,8 +252,23 @@ class FederatedSimulator:
         self.params = jax.tree_util.tree_map(jnp.asarray, self.params)
 
     # ------------------------------------------------------------------
-    def _merge(self, x_locals) -> Tuple[Tuple[int, ...], ...]:
-        """Run the paper's merging algorithm on the round's local models."""
+    def _correlate(self, x_locals) -> np.ndarray:
+        """K x K Pearson matrix over the round's local models.
+
+        Device pipeline: streaming tree-Pearson — per-leaf (gram, sums)
+        accumulation (optionally through the Pallas kernel) with fused
+        column subsampling; only the K x K result crosses to host. Host
+        pipeline: the original materialized (K, M) oracle."""
+        if self.fl.pipeline == "device":
+            return np.asarray(
+                pearson_tree(
+                    x_locals,
+                    exclude_constant=self.fl.corr_exclude_constant,
+                    sample=self.fl.corr_sample,
+                    seed=self.fl.seed,
+                    use_kernel=self.fl.use_kernel_pearson,
+                )
+            )
         from repro.core.pearson import subsample_columns
 
         X = client_param_matrix(
@@ -211,9 +277,12 @@ class FederatedSimulator:
         X = subsample_columns(X, self.fl.corr_sample, seed=self.fl.seed)
         if self.fl.use_kernel_pearson:
             from repro.core.pearson import pearson_matrix_fast
-            corr = np.asarray(pearson_matrix_fast(jnp.asarray(X)))
-        else:
-            corr = np.asarray(pearson_matrix(jnp.asarray(X)))
+            return np.asarray(pearson_matrix_fast(jnp.asarray(X)))
+        return np.asarray(pearson_matrix(jnp.asarray(X)))
+
+    def _merge(self, x_locals) -> Tuple[Tuple[int, ...], ...]:
+        """Run the paper's merging algorithm on the round's local models."""
+        corr = self._correlate(x_locals)
         plan = build_merge_plan(
             corr,
             data_sizes=self.weights.astype(np.int64),
@@ -224,9 +293,13 @@ class FederatedSimulator:
         )
         self.merge_plan = plan
         # merge control variates (paper line 46: c_merged)
-        self.c_locals = jax.tree_util.tree_map(
-            jnp.asarray, apply_merge(plan, jax.device_get(self.c_locals))
-        )
+        if self.fl.pipeline == "device":
+            # jitted W @ leaf contraction; c_locals donated (mixed in place)
+            self.c_locals = apply_merge_device(plan, self.c_locals)
+        else:
+            self.c_locals = jax.tree_util.tree_map(
+                jnp.asarray, apply_merge(plan, jax.device_get(self.c_locals))
+            )
         # intermediary node inherits the union of member data
         for group in plan.groups:
             rep = group[0]
@@ -235,6 +308,8 @@ class FederatedSimulator:
             self.shards[rep] = (xs, ys)
         self.weights = merged_data_sizes(plan, self.weights).astype(np.float32)
         self.active = plan.active.astype(np.float32)
+        if self.fl.pipeline == "device":
+            self._upload_shards()  # representative shards grew
         return plan.groups
 
     # ------------------------------------------------------------------
@@ -242,9 +317,18 @@ class FederatedSimulator:
         fl = self.fl
         for t in range(fl.num_rounds):
             t0 = time.time()
-            batches = self._sample_batches()
+            batches = self._sample_batches(t)
             steps_mask, round_mask, poison = self._round_masks(t)
-            x_before = self.params
+            # round_fn donates params/controls; keep a pre-round copy only
+            # on rounds where a delayed client will actually need it
+            delayed_now = self.scenario.network_delay is not None and bool(
+                (self._delay_sched[t] > 0).any()
+            )
+            x_before = None
+            if delayed_now:
+                x_before = jax.tree_util.tree_map(
+                    lambda a: jnp.array(a, copy=True), self.params
+                )
             (
                 self.params,
                 self.c_global,
@@ -262,7 +346,7 @@ class FederatedSimulator:
                 jnp.asarray(round_mask),
                 jnp.asarray(poison),
             )
-            if self.scenario.network_delay is not None:
+            if delayed_now:
                 self._enqueue_stale(t, x_before, x_locals)
             merged: Tuple[Tuple[int, ...], ...] = ()
             if fl.merge_enabled and (
@@ -295,3 +379,20 @@ class FederatedSimulator:
                     + (f" merged={merged}" if merged else "")
                 )
         return self.history
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "batch"))
+def _gather_batches(key, xs, ys, offsets, lengths, steps: int, batch: int):
+    """(K, steps, batch, ...) uniform batch gather over flat shards.
+
+    ``xs``/``ys`` hold all clients' rows back to back; client k owns rows
+    [offsets[k], offsets[k] + lengths[k]). Indices are drawn with integer
+    ``jax.random.randint`` (exact for any shard size — no f32 rounding of
+    row ids). Runs jitted on device — the per-round batch tensors are
+    produced and consumed without touching host memory."""
+    K = lengths.shape[0]
+    row = jax.random.randint(
+        key, (K, steps, batch), minval=0, maxval=lengths[:, None, None]
+    )
+    idx = offsets[:, None, None] + row
+    return {"x": jnp.take(xs, idx, axis=0), "y": jnp.take(ys, idx, axis=0)}

@@ -9,12 +9,14 @@ mask, so the jitted federated round never changes shape.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
@@ -110,7 +112,11 @@ def build_merge_plan(
 def apply_merge(plan: MergePlan, stacked_tree):
     """Apply W to every leaf of a stacked (K, ...) pytree:
     out[k] = sum_j W[k, j] * in[j]. Representatives receive the convex
-    combination (paper lines 45-46: x_merged, c_merged); retired rows zero."""
+    combination (paper lines 45-46: x_merged, c_merged); retired rows zero.
+
+    Host numpy/f64 path — the oracle. The simulator's hot path uses
+    ``apply_merge_device``, which runs the same contraction jitted on
+    device without pulling the stacked tree to host."""
     W = plan.W
 
     def _mix(leaf):
@@ -119,6 +125,25 @@ def apply_merge(plan: MergePlan, stacked_tree):
         return out.reshape(leaf.shape)
 
     return jax.tree_util.tree_map(_mix, stacked_tree)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _mix_tree_device(W: jnp.ndarray, stacked_tree):
+    """out[k] = sum_j W[k, j] * in[j] on every leaf, f32 contraction on
+    device. The stacked tree is donated: XLA reuses its buffers for the
+    output, so merging K full client states is in-place in HBM."""
+    def _mix(leaf):
+        mixed = jnp.tensordot(W, leaf.astype(jnp.float32), axes=1)
+        return mixed.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(_mix, stacked_tree)
+
+
+def apply_merge_device(plan: MergePlan, stacked_tree):
+    """Device-resident ``apply_merge``: one jitted W @ leaf einsum per leaf
+    with donated buffers. Merges local models and control variates through
+    the same path; the caller's tree is consumed (donated)."""
+    return _mix_tree_device(jnp.asarray(plan.W), stacked_tree)
 
 
 def merged_data_sizes(plan: MergePlan, data_sizes: Sequence[int]) -> np.ndarray:

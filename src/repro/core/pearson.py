@@ -1,20 +1,26 @@
 """Pearson correlation matrix over client parameter vectors (paper §IV.D,
 merging-algorithm step 1).
 
-``pearson_matrix`` is the pure-jnp implementation (also the oracle for the
-Pallas kernel in repro/kernels/pearson). ``pearson_matrix_fast`` dispatches
-to the streaming Pallas kernel for large M (the at-scale path: M = model
-parameter count, up to tens of billions — a single standardized copy would
-double HBM traffic, so the kernel fuses standardization into the Gram
-accumulation).
+``pearson_matrix`` is the pure-jnp two-pass implementation (the oracle for
+everything else). ``pearson_tree`` is the production path: it streams the
+stacked client pytree leaf by leaf through a (gram, sums) accumulator —
+either the Pallas kernel in repro/kernels/pearson or a jnp dot with f32
+accumulation — so the correlation never materializes the (K, M) client
+matrix. Column subsampling and constant-leaf exclusion are fused into the
+stream (indices are bucketed per leaf; nothing gathers over a concatenated
+matrix), and a bf16-input mode halves the HBM read at scale while keeping
+f32 accumulators.
+
+``client_param_matrix`` + ``subsample_columns`` remain as the materialized
+oracle pipeline for tests and benchmarks.
 """
 from __future__ import annotations
+
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.utils.pytree import tree_flatten_to_vector
 
 
 def pearson_matrix(X: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
@@ -50,21 +56,33 @@ def pearson_matrix_fast(X: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
 CONSTANT_INIT_LEAVES = ("scale", "b_fgate", "b_f", "b_i", "lam", "b")
 
 
-def client_param_matrix(
-    stacked_params,
-    dtype=jnp.float32,
-    exclude_constant: bool = False,
-) -> jnp.ndarray:
-    """Stacked client params (leading K axis on every leaf) -> (K, M)."""
+def _leaf_views(stacked_params, exclude_constant: bool) -> List[jnp.ndarray]:
+    """Stacked client params -> list of (K, m_leaf) views, deterministic
+    tree_flatten order (matches client_param_matrix's column order)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(stacked_params)
-    cols = []
+    views = []
     for path, leaf in flat:
         name = [str(getattr(p, "key", "")) for p in path]
         name = name[-1] if name else ""
         if exclude_constant and name in CONSTANT_INIT_LEAVES:
             continue
-        cols.append(leaf.reshape(leaf.shape[0], -1).astype(dtype))
-    return jnp.concatenate(cols, axis=1)
+        views.append(leaf.reshape(leaf.shape[0], -1))
+    return views
+
+
+def client_param_matrix(
+    stacked_params,
+    dtype=jnp.float32,
+    exclude_constant: bool = False,
+) -> jnp.ndarray:
+    """Stacked client params (leading K axis on every leaf) -> (K, M).
+
+    Materializes the full matrix — oracle/benchmark path only; the default
+    merge path streams leaves via ``pearson_tree``."""
+    return jnp.concatenate(
+        [v.astype(dtype) for v in _leaf_views(stacked_params, exclude_constant)],
+        axis=1,
+    )
 
 
 def subsample_columns(X: jnp.ndarray, n: int, seed: int = 0) -> jnp.ndarray:
@@ -79,3 +97,84 @@ def subsample_columns(X: jnp.ndarray, n: int, seed: int = 0) -> jnp.ndarray:
     rng = np.random.default_rng(seed)
     idx = jnp.asarray(rng.choice(X.shape[1], size=n, replace=False))
     return X[:, idx]
+
+
+def sample_leaf_columns(
+    leaf_sizes: Sequence[int], n: int, seed: int = 0
+) -> Optional[List[np.ndarray]]:
+    """Draw ``subsample_columns``'s global column sample, bucketed per leaf.
+
+    Returns per-leaf local column indices (or None for 'use everything').
+    The sampled SET is identical to subsampling the concatenated matrix
+    with the same seed — Pearson is invariant to column order, so the
+    streamed estimate matches the materialized oracle."""
+    M = int(sum(leaf_sizes))
+    if n <= 0 or n >= M:
+        return None
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.choice(M, size=n, replace=False))
+    offsets = np.concatenate([[0], np.cumsum(leaf_sizes)])
+    lo = np.searchsorted(idx, offsets[:-1], side="left")
+    hi = np.searchsorted(idx, offsets[1:], side="left")
+    return [idx[a:b] - off for a, b, off in zip(lo, hi, offsets[:-1])]
+
+
+@jax.jit
+def _accumulate_chunk(gram, sums, chunk):
+    """jnp fallback accumulator: one HBM pass per chunk, f32 accumulation
+    regardless of input dtype (mirrors the Pallas kernel's in-VMEM cast)."""
+    x = chunk.astype(jnp.float32)
+    gram = gram + jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return gram, sums + jnp.sum(x, axis=1)
+
+
+def pearson_tree(
+    stacked_params,
+    exclude_constant: bool = False,
+    sample: int = 0,
+    seed: int = 0,
+    compute_dtype=None,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    eps: float = 1e-8,
+) -> jnp.ndarray:
+    """Streaming tree-Pearson: stacked (K, ...) pytree -> (K, K) correlation
+    without ever materializing the (K, M) client matrix.
+
+    Each leaf is reshaped (a view), optionally column-subsampled in place,
+    optionally cast to ``compute_dtype`` (bf16 halves the HBM read; both
+    accumulators stay f32), and folded into a running (gram, sums) pair —
+    through the Pallas kernel when ``use_kernel`` (each chunk padded
+    independently, at most one block of waste per leaf) or a jnp dot
+    otherwise. Finalization divides by the true column count, shared with
+    the kernel wrapper in kernels/pearson/ops.py.
+    """
+    from repro.kernels.pearson.ops import finalize_pearson, pearson_chunk
+
+    views = _leaf_views(stacked_params, exclude_constant)
+    if not views:
+        raise ValueError("pearson_tree: no leaves to correlate")
+    K = int(views[0].shape[0])
+    picked = sample_leaf_columns([v.shape[1] for v in views], sample, seed)
+
+    gram = jnp.zeros((K, K), jnp.float32)
+    sums = jnp.zeros((K,), jnp.float32)
+    n_cols = 0
+    for i, v in enumerate(views):
+        if picked is not None:
+            if picked[i].size == 0:
+                continue
+            v = jnp.take(v, jnp.asarray(picked[i]), axis=1)
+        if v.shape[1] == 0:
+            continue  # zero-width leaf: nothing to accumulate
+        if compute_dtype is not None:
+            v = v.astype(compute_dtype)
+        n_cols += int(v.shape[1])
+        if use_kernel:
+            g, s = pearson_chunk(v, interpret=interpret)
+            gram, sums = gram + g, sums + s
+        else:
+            gram, sums = _accumulate_chunk(gram, sums, v)
+    return finalize_pearson(gram, sums, n_cols, eps=eps)

@@ -3,7 +3,7 @@
 Problem: K client parameter vectors of length M (M up to tens of billions
 at pod scale) -> K x K correlation matrix. A naive implementation
 standardizes a copy of X (one extra full read+write of HBM) and then runs a
-GEMM. This kernel fuses both: each grid step loads one (K, M_BLK) tile into
+GEMM. This kernel fuses both: each grid step loads one (K, m_blk) tile into
 VMEM once and accumulates
 
     gram  += X_blk @ X_blk^T        (MXU, K padded to sublane multiple)
@@ -12,7 +12,10 @@ VMEM once and accumulates
 so the whole computation is a single pass over HBM at arithmetic intensity
 ~K flops/byte. Correlation finalization (tiny, K x K) happens in ops.py.
 
-Grid: (M / M_BLK,) — sequential on TPU, so the accumulators in the output
+Inputs may be bf16 (the at-scale one-pass mode): the cast to f32 happens in
+VMEM, so HBM traffic is halved while both accumulators stay f32.
+
+Grid: (M / m_blk,) — sequential on TPU, so the accumulators in the output
 VMEM blocks persist across steps; they are zeroed at step 0 via pl.when.
 """
 from __future__ import annotations
@@ -26,6 +29,11 @@ from jax.experimental import pallas as pl
 M_BLK = 2048  # lane-multiple block of the feature axis; (16, 2048) f32 = 128 KiB
 
 
+def sublane(dtype) -> int:
+    """Minimum second-to-last tile dim for ``dtype`` (f32 8, bf16 16)."""
+    return 16 if dtype == jnp.bfloat16 else 8
+
+
 def _kernel(x_ref, gram_ref, sums_ref):
     step = pl.program_id(0)
 
@@ -34,24 +42,30 @@ def _kernel(x_ref, gram_ref, sums_ref):
         gram_ref[...] = jnp.zeros_like(gram_ref)
         sums_ref[...] = jnp.zeros_like(sums_ref)
 
-    x = x_ref[...].astype(jnp.float32)            # (Kp, M_BLK)
-    # MXU: (Kp, M_BLK) @ (M_BLK, Kp)
+    x = x_ref[...].astype(jnp.float32)            # (Kp, m_blk)
+    # MXU: (Kp, m_blk) @ (m_blk, Kp)
     gram_ref[...] += jax.lax.dot_general(
         x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
     sums_ref[...] += jnp.sum(x, axis=1, keepdims=True)
 
 
-def pearson_accumulate(X: jnp.ndarray, interpret: bool = True):
-    """X: (Kp, Mp) with Kp a multiple of 8 and Mp a multiple of M_BLK
-    (ops.py pads). Returns (gram (Kp,Kp), sums (Kp,1)) in f32."""
+def pearson_accumulate(X: jnp.ndarray, interpret: bool = True,
+                       m_blk: int = M_BLK):
+    """X: (Kp, Mp) with Kp a sublane multiple for X.dtype and Mp a multiple
+    of ``m_blk`` (ops.py pads). Returns (gram (Kp,Kp), sums (Kp,1)) in f32.
+
+    Zero columns of padding contribute nothing to either accumulator, so the
+    caller can pad each streamed chunk independently and still divide by the
+    true column count at finalization.
+    """
     Kp, Mp = X.shape
-    assert Kp % 8 == 0 and Mp % M_BLK == 0, (Kp, Mp)
-    n_blk = Mp // M_BLK
+    assert Kp % sublane(X.dtype) == 0 and Mp % m_blk == 0, (Kp, Mp, m_blk)
+    n_blk = Mp // m_blk
     return pl.pallas_call(
         _kernel,
         grid=(n_blk,),
-        in_specs=[pl.BlockSpec((Kp, M_BLK), lambda i: (0, i))],
+        in_specs=[pl.BlockSpec((Kp, m_blk), lambda i: (0, i))],
         out_specs=[
             pl.BlockSpec((Kp, Kp), lambda i: (0, 0)),
             pl.BlockSpec((Kp, 1), lambda i: (0, 0)),

@@ -66,6 +66,8 @@ def run_experiment(
     steps_per_epoch: int = 10,
     local_epochs: int = 2,
     lr_local: float = 0.05,
+    corr_sample: int = 0,
+    pipeline: str = "device",
     seed: int = 0,
     verbose: bool = True,
 ):
@@ -90,6 +92,8 @@ def run_experiment(
         merge_round=merge_round,
         threshold=threshold,
         max_group_size=max_group_size,
+        corr_sample=corr_sample,
+        pipeline=pipeline,
         seed=seed,
     )
     sim = FederatedSimulator(
@@ -115,6 +119,13 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--merge-round", type=int, default=4)
     ap.add_argument("--threshold", type=float, default=0.7)
+    ap.add_argument("--corr-sample", type=int, default=0,
+                    help="correlate over a random coordinate subsample "
+                         "(0 = all params), fused into the streaming path")
+    ap.add_argument("--pipeline", default="device",
+                    choices=["device", "host"],
+                    help="merge pipeline: zero-copy streaming (device) or "
+                         "the numpy oracle (host)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/fl")
     args = ap.parse_args()
@@ -126,6 +137,8 @@ def main():
         rounds=args.rounds,
         merge_round=args.merge_round,
         threshold=args.threshold,
+        corr_sample=args.corr_sample,
+        pipeline=args.pipeline,
         seed=args.seed,
     )
     os.makedirs(args.out, exist_ok=True)

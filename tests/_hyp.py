@@ -1,0 +1,79 @@
+"""Hypothesis import shim.
+
+The property tests declare ``hypothesis`` as a dev dependency
+(requirements-dev.txt) and use it whenever it is installed. On minimal
+images without it, collection must not hard-error and the properties
+should still be exercised — so this module falls back to a tiny
+deterministic stand-in that supports exactly the strategy surface these
+tests use (``st.integers``/``st.floats`` ranges, ``@given`` over keyword
+strategies, ``@settings(max_examples=..., deadline=...)``). The fallback
+draws a fixed, per-test-seeded sample of examples; it does not shrink.
+
+Usage (instead of ``from hypothesis import ...``):
+
+    from _hyp import given, settings, st
+"""
+from __future__ import annotations
+
+import zlib
+
+try:  # real hypothesis when available
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # deterministic fallback
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    # keep the fallback fast: enough examples to exercise the property,
+    # few enough that interpret-mode kernel tests stay cheap
+    _MAX_FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # the wrapper deliberately takes no parameters: the strategy
+            # kwargs must not look like pytest fixtures
+            def wrapper():
+                n = min(
+                    getattr(wrapper, "_max_examples", 20),
+                    _MAX_FALLBACK_EXAMPLES,
+                )
+                rng = np.random.default_rng(
+                    zlib.adler32(fn.__qualname__.encode())
+                )
+                for _ in range(n):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """Data pipeline tests: synthetic MNIST, partitioners, attacks, faults."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.attacks import feature_noise, inject_fake_data, label_flip
 from repro.data.faults import NetworkDelay, PacketLoss

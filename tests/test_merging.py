@@ -1,7 +1,7 @@
 """Unit + hypothesis property tests for the paper's merging algorithm."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.merging import (
     apply_merge,

@@ -2,7 +2,7 @@
 (oracle + kernel agree on the mathematical invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

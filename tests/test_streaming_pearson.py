@@ -1,0 +1,237 @@
+"""Streaming merge pipeline vs the materialized/host oracles:
+tree-Pearson against ``pearson_matrix`` (incl. constant-leaf exclusion and
+fused subsampling), device ``apply_merge`` against the numpy f64 oracle,
+and the end-to-end simulator device/host pipeline parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.merging import apply_merge, apply_merge_device, build_merge_plan
+from repro.core.pearson import (
+    client_param_matrix,
+    pearson_matrix,
+    pearson_tree,
+    sample_leaf_columns,
+    subsample_columns,
+)
+
+
+def _stacked(seed=0, K=6):
+    """Stacked pytree with correlated clients 0-2, a constant-init 'b' and
+    'scale' leaf, and leaves both above and below one lane block (128)."""
+    rng = np.random.default_rng(seed)
+    base = {
+        "layer0": {"w": rng.normal(size=(40, 30)).astype(np.float32),
+                   "b": np.zeros(30, np.float32),
+                   "scale": np.ones(30, np.float32)},
+        "layer1": {"w": rng.normal(size=(64, 50)).astype(np.float32),
+                   "b": np.zeros(50, np.float32)},
+        "head": {"w": rng.normal(size=(17,)).astype(np.float32)},
+    }
+    clients = []
+    for i in range(K):
+        if i < 3:
+            c = jax.tree_util.tree_map(
+                lambda x: x + 0.05 * rng.normal(size=x.shape).astype(np.float32),
+                base,
+            )
+        else:
+            c = jax.tree_util.tree_map(
+                lambda x: rng.normal(size=x.shape).astype(np.float32), base
+            )
+        clients.append(c)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *clients)
+
+
+# ---------------------------------------------------------------------------
+# streaming tree-Pearson vs materialized oracle
+# ---------------------------------------------------------------------------
+
+
+def test_pearson_tree_matches_oracle():
+    stacked = _stacked()
+    want = np.asarray(pearson_matrix(client_param_matrix(stacked)))
+    got = np.asarray(pearson_tree(stacked))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_pearson_tree_kernel_path_matches_oracle():
+    stacked = _stacked(seed=1)
+    want = np.asarray(pearson_matrix(client_param_matrix(stacked)))
+    got = np.asarray(pearson_tree(stacked, use_kernel=True, interpret=True))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_pearson_tree_constant_leaf_exclusion():
+    stacked = _stacked(seed=2)
+    want = np.asarray(
+        pearson_matrix(client_param_matrix(stacked, exclude_constant=True))
+    )
+    got = np.asarray(pearson_tree(stacked, exclude_constant=True))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # exclusion changes the estimate (the zero/one leaves are dropped)
+    full = np.asarray(pearson_tree(stacked))
+    assert not np.allclose(full, got, atol=1e-5)
+
+
+def test_pearson_tree_subsample_matches_oracle_sample():
+    """Fused per-leaf subsampling draws the SAME column set as subsampling
+    the materialized matrix with the same seed (order-invariant)."""
+    stacked = _stacked(seed=3)
+    n, seed = 500, 11
+    X = client_param_matrix(stacked)
+    want = np.asarray(pearson_matrix(subsample_columns(X, n, seed=seed)))
+    got = np.asarray(pearson_tree(stacked, sample=n, seed=seed))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_sample_leaf_columns_partitions_global_sample():
+    sizes = [7, 130, 3, 2048, 64]
+    picked = sample_leaf_columns(sizes, 300, seed=0)
+    assert sum(len(p) for p in picked) == 300
+    for p, size in zip(picked, sizes):
+        assert len(np.unique(p)) == len(p)
+        assert p.size == 0 or (p.min() >= 0 and p.max() < size)
+    # sample >= total -> use everything
+    assert sample_leaf_columns(sizes, sum(sizes)) is None
+    assert sample_leaf_columns(sizes, 0) is None
+
+
+def test_pearson_tree_bf16_mode_close():
+    """bf16-input / f32-accumulate mode stays within bf16 resolution of the
+    f32 oracle."""
+    stacked = _stacked(seed=4)
+    want = np.asarray(pearson_matrix(client_param_matrix(stacked)))
+    got = np.asarray(pearson_tree(stacked, compute_dtype=jnp.bfloat16))
+    np.testing.assert_allclose(got, want, atol=0.02)
+    assert np.allclose(np.diag(got), 1.0)
+
+
+def test_pearson_tree_skips_zero_width_leaves():
+    """An empty (K, 0) leaf contributes nothing instead of crashing the
+    kernel path's padding."""
+    stacked = _stacked(seed=8)
+    with_empty = {**stacked, "unused": jnp.zeros((6, 0), jnp.float32)}
+    want = np.asarray(pearson_tree(stacked))
+    for use_kernel in (False, True):
+        got = np.asarray(pearson_tree(with_empty, use_kernel=use_kernel))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_pearson_tree_constant_rows_correlate_zero():
+    """A client whose parameters are all-constant correlates 0 (matches the
+    oracle's zero-variance handling)."""
+    stacked = _stacked(seed=5)
+    stacked = jax.tree_util.tree_map(
+        lambda l: l.at[4].set(jnp.full(l.shape[1:], 0.7, l.dtype)), stacked
+    )
+    got = np.asarray(pearson_tree(stacked))
+    want = np.asarray(pearson_matrix(client_param_matrix(stacked)))
+    np.testing.assert_allclose(got[4], want[4], atol=1e-5)
+    assert np.allclose(got[4, :4], 0.0, atol=1e-5) and got[4, 4] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# device apply_merge vs numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def _plan(K=6, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(-1, 1, (K, K))
+    corr = (A + A.T) / 2
+    np.fill_diagonal(corr, 1.0)
+    return build_merge_plan(corr, rng.integers(1, 50, K), threshold=0.4)
+
+
+def test_apply_merge_device_matches_host():
+    stacked = _stacked(seed=6)
+    plan = _plan()
+    want = apply_merge(plan, jax.device_get(stacked))
+    copy = jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), stacked)
+    got = apply_merge_device(plan, copy)  # donates its input
+    for w, g in zip(jax.tree_util.tree_leaves(want),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_allclose(np.asarray(g), w, atol=1e-5)
+        assert g.dtype == w.dtype
+
+
+def test_apply_merge_device_donates():
+    stacked = _stacked(seed=7)
+    plan = _plan(seed=7)
+    out = apply_merge_device(plan, stacked)
+    leaf = jax.tree_util.tree_leaves(stacked)[0]
+    with pytest.raises(RuntimeError):
+        _ = np.asarray(leaf)  # donated buffer is deleted
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(out))
+
+
+def test_apply_merge_device_mixed_dtypes():
+    """Control trees can be bf16 at scale; mixing happens in f32 and casts
+    back per leaf."""
+    K = 4
+    rng = np.random.default_rng(0)
+    stacked = {
+        "w": jnp.asarray(rng.normal(size=(K, 33)).astype(np.float32)),
+        "h": jnp.asarray(rng.normal(size=(K, 17)).astype(np.float32)).astype(
+            jnp.bfloat16
+        ),
+    }
+    plan = _plan(K=K, seed=1)
+    want = apply_merge(plan, jax.device_get(stacked))
+    got = apply_merge_device(plan, dict(stacked))
+    assert got["h"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got["w"]), want["w"], atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got["h"].astype(jnp.float32)),
+        want["h"].astype(np.float32),
+        atol=0.05,
+    )
+
+
+# ---------------------------------------------------------------------------
+# simulator pipeline parity
+# ---------------------------------------------------------------------------
+
+
+def test_sim_rejects_unknown_pipeline():
+    from test_federation import _sim
+
+    sim = _sim()  # template config
+    bad = sim.fl.__class__(**{**sim.fl.__dict__, "pipeline": "devcie"})
+    from repro.core import FederatedSimulator
+
+    with pytest.raises(ValueError, match="pipeline"):
+        FederatedSimulator(
+            init_params_fn=lambda k: {"w": jnp.zeros((2, 2))},
+            loss_fn=lambda p, b: jnp.float32(0.0),
+            eval_fn=lambda p: 0.0,
+            client_shards=[(np.zeros((4, 2), np.float32),
+                            np.zeros(4, np.int32))] * 2,
+            fl=bad,
+        )
+
+
+def test_sim_device_and_host_pipelines_agree():
+    """The zero-copy device pipeline and the host oracle pipeline both
+    merge correlated clients and converge on the toy task. (Batch RNG
+    differs between the pipelines — jax.random vs numpy — so trajectories
+    are compared behaviorally, not bitwise; the correlate/apply stages are
+    compared exactly in the tests above.)"""
+    from test_federation import _sim, NUM_CLIENTS  # reuse the toy harness
+
+    results = {}
+    for pipeline in ("device", "host"):
+        sim = _sim(threshold=0.3, seed=9)
+        sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "pipeline": pipeline})
+        results[pipeline] = sim.run()
+    dev, host = results["device"], results["host"]
+    for hist in (dev, host):
+        assert hist[2].merged_groups               # merged at merge_round=2
+        assert hist[-1].active_nodes < NUM_CLIENTS
+        assert hist[-1].accuracy > 0.85
+    assert abs(dev[-1].accuracy - host[-1].accuracy) < 0.06
