@@ -64,7 +64,7 @@ def _run_once(threshold=0.6, merge_round=2, max_group=3, alpha="uniform",
         client_shards=shards, fl=fl, scenario=Scenario(),
     )
     hist = sim.run()
-    return float(np.mean([r.accuracy for r in hist[-3:]])), hist[-1].active_nodes
+    return float(np.mean([r.accuracy for r in hist[-3:]])), hist[-1].active_nodes_end
 
 
 def run():

@@ -40,7 +40,7 @@ def run(rounds: int = 10, seed: int = 0, cache: str = "experiments/fl/fig2.json"
                 _, hist = run_experiment(scenario_name=scen, merge=merge, **kw)
                 results[tag] = {
                     "acc": [r.accuracy for r in hist],
-                    "active": [r.active_nodes for r in hist],
+                    "active": [r.active_nodes_end for r in hist],
                     "bytes": [r.bytes_sent for r in hist],
                     "merged": [list(map(list, r.merged_groups)) for r in hist],
                 }

@@ -46,7 +46,7 @@ def main():
 
     final = history[-1]
     print(f"\nfinal: accuracy={final.accuracy:.3f}, "
-          f"active nodes {history[0].active_nodes} -> {final.active_nodes}, "
+          f"active nodes {history[0].active_nodes} -> {final.active_nodes_end}, "
           f"bytes/round {history[0].bytes_sent:,} -> {final.bytes_sent:,}")
 
 

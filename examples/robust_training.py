@@ -29,7 +29,7 @@ def main():
             )
             name = "proposed" if merge else "scaffold"
             print(f"{scen:>12s} {name:>9s} {hist[-1].accuracy:9.4f} "
-                  f"{hist[-1].active_nodes:6d}")
+                  f"{hist[-1].active_nodes_end:6d}")
 
 
 if __name__ == "__main__":

@@ -7,11 +7,19 @@ communication round. Merging never changes device-side shapes: retired
 clients keep their slot with active=0, and their data is concatenated into
 the representative's shard (the intermediary node answers for the group —
 paper §IV.D "managing federated learning rounds in place of the original
-nodes"). Communication accounting reads the active mask.
+nodes"). Communication accounting reads the active mask as it stood when
+the round trained (pre-merge on merge rounds).
+
+Mesh-aware mode: pass a Mesh with a 'pod' axis and the stacked client
+axis — local controls/models, per-round batch stacks, the losses vector,
+and the flat shard-row buffers — carries a NamedSharding over 'pod'
+(globals replicated), so the same simulator drives the pod-sharded
+production layout that launch/fl_dryrun.py analyzes. The device pipeline
+also double-buffers the batch gather: round t+1's gather is dispatched
+while round t computes (FLConfig.overlap_gather).
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -20,7 +28,9 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import sharding as SH
 from repro.core.merging import (
     apply_merge,
     apply_merge_device,
@@ -30,7 +40,7 @@ from repro.core.merging import (
 from repro.core.pearson import client_param_matrix, pearson_matrix, pearson_tree
 from repro.core.scaffold import AlgoConfig, init_controls, make_round_fn
 from repro.data.faults import NetworkDelay, PacketLoss
-from repro.utils.pytree import tree_size
+from repro.utils.pytree import tree_bytes
 
 
 @dataclass(frozen=True)
@@ -67,6 +77,10 @@ class FLConfig:
     # matrix, f64 host merge-apply, numpy batch gather) kept for A/B
     # parity tests and benchmarks.
     pipeline: str = "device"
+    # double-buffered batch gather (device pipeline): round t+1's gather is
+    # dispatched while round t's round_fn computes, so the gather is off
+    # the round loop's critical path. Off = the synchronous oracle order.
+    overlap_gather: bool = True
     seed: int = 0
 
     @property
@@ -88,12 +102,18 @@ class Scenario:
 
 @dataclass
 class RoundRecord:
+    """Per-round accounting. Communication fields describe the round as it
+    RAN: on merge rounds the clients that trained and uploaded are the
+    pre-merge active set, so ``active_nodes``/``updates_sent``/``mean_loss``
+    are snapshotted before ``_merge`` shrinks the mask; the post-merge
+    population is ``active_nodes_end`` (== ``active_nodes`` otherwise)."""
     round: int
     accuracy: float
     mean_loss: float
-    active_nodes: int
-    updates_sent: int
+    active_nodes: int        # clients active during the round (pre-merge)
+    updates_sent: int        # pre-merge active clients whose update arrived
     bytes_sent: int
+    active_nodes_end: int = -1   # active set after any merge this round
     merged_groups: Tuple[Tuple[int, ...], ...] = ()
     wall_s: float = 0.0
 
@@ -107,12 +127,16 @@ class FederatedSimulator:
         client_shards: Sequence[Tuple[np.ndarray, np.ndarray]],
         fl: FLConfig,
         scenario: Optional[Scenario] = None,
+        mesh: Optional[Mesh] = None,
     ):
         if fl.pipeline not in ("device", "host"):
             raise ValueError(
                 f"FLConfig.pipeline must be 'device' or 'host', got {fl.pipeline!r}"
             )
+        if mesh is not None and fl.pipeline != "device":
+            raise ValueError("mesh-aware mode requires pipeline='device'")
         self.fl = fl
+        self.mesh = mesh
         self.scenario = scenario or Scenario()
         self.eval_fn = eval_fn
         self.shards: List[Tuple[np.ndarray, np.ndarray]] = [
@@ -127,9 +151,35 @@ class FederatedSimulator:
         # (params, c_global, c_locals) are donated: each round's state update
         # reuses the previous round's HBM buffers instead of allocating and
         # copying — the round loop holds no stale references (see run()).
-        self.round_fn = jax.jit(
-            make_round_fn(loss_fn, fl.algo), donate_argnums=(0, 1, 2)
-        )
+        if mesh is not None:
+            # Mesh-aware mode: the stacked client axis carries a
+            # NamedSharding over the federation ('pod') axis, globals are
+            # replicated across pods. One layout contract for controls,
+            # local models, losses, batch stacks, and the flat shard
+            # buffers — round_fn and the gather pin their outputs to it so
+            # the round loop never reshards between stages.
+            rep = NamedSharding(mesh, P())
+            stacked = NamedSharding(mesh, P(SH.client_axis(mesh, self.K)))
+            self.params = jax.device_put(self.params, rep)
+            self.c_global = jax.device_put(self.c_global, rep)
+            self.c_locals = jax.device_put(
+                self.c_locals, SH.client_stack_shardings(mesh, self.c_locals)
+            )
+            self.round_fn = jax.jit(
+                make_round_fn(loss_fn, fl.algo),
+                donate_argnums=(0, 1, 2),
+                out_shardings=(rep, rep, stacked, stacked, stacked),
+            )
+            self._gather = jax.jit(
+                _gather_batches,
+                static_argnames=("steps", "batch"),
+                out_shardings={"x": stacked, "y": stacked},
+            )
+        else:
+            self.round_fn = jax.jit(
+                make_round_fn(loss_fn, fl.algo), donate_argnums=(0, 1, 2)
+            )
+            self._gather = _gather_batches_jit
 
         self.active = np.ones(self.K, np.float32)
         self.weights = np.asarray([len(y) for _, y in self.shards], np.float32)
@@ -148,10 +198,12 @@ class FederatedSimulator:
             )
         else:
             self._delay_sched = np.zeros((fl.num_rounds, self.K), np.int64)
-        self._stale: List[tuple] = []  # (arrival_round, cid, dx pytree)
+        # (arrival_round, cid, dx pytree, send-time weight)
+        self._stale: List[tuple] = []
 
-        self._param_bytes = tree_size(self.params) * 4
+        self._param_bytes = tree_bytes(self.params)
         self._batch_key = jax.random.PRNGKey(fl.seed)
+        self._prefetched: Optional[Tuple[int, dict]] = None
         if fl.pipeline == "device":
             self._upload_shards()
 
@@ -160,16 +212,32 @@ class FederatedSimulator:
         """Device-resident copy of the client shards in a flat concatenated
         layout (rows of all clients back to back + per-client offset and
         length), rebuilt only when shards change (init + merge). No
-        padding: total device memory is exactly the sum of shard rows.
-        Per-round batch sampling gathers from these on device — no
-        host->device transfer per round."""
-        self._shard_x = jnp.asarray(np.concatenate([x for x, _ in self.shards]))
-        self._shard_y = jnp.asarray(np.concatenate([y for _, y in self.shards]))
+        padding: total device memory is exactly the sum of shard rows —
+        retired clients hold zero-length slots, so every training row
+        exists exactly once. Per-round batch sampling gathers from these
+        on device — no host->device transfer per round. In mesh-aware mode
+        the row dimension is sharded over the 'pod' axis (merging moves
+        rows between clients but preserves the total, so the sharding
+        survives merge rounds)."""
+        xs = np.concatenate([x for x, _ in self.shards])
+        ys = np.concatenate([y for _, y in self.shards])
         lens = np.asarray([len(y) for _, y in self.shards], np.int32)
-        self._shard_len = jnp.asarray(lens)
-        self._shard_off = jnp.asarray(
-            np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
-        )
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+        if self.mesh is not None:
+            rep = NamedSharding(self.mesh, P())
+            self._shard_x = jax.device_put(
+                xs, SH.row_sharding(self.mesh, len(xs))
+            )
+            self._shard_y = jax.device_put(
+                ys, SH.row_sharding(self.mesh, len(ys))
+            )
+            self._shard_len = jax.device_put(lens, rep)
+            self._shard_off = jax.device_put(offs, rep)
+        else:
+            self._shard_x = jnp.asarray(xs)
+            self._shard_y = jnp.asarray(ys)
+            self._shard_len = jnp.asarray(lens)
+            self._shard_off = jnp.asarray(offs)
 
     def _sample_batches(self, t: int):
         """(K, steps, B, ...) batches drawn from each client's shard.
@@ -181,12 +249,18 @@ class FederatedSimulator:
         S, Bsz = self.fl.local_steps, self.fl.batch_size
         if self.fl.pipeline == "device":
             key = jax.random.fold_in(self._batch_key, t)
-            return _gather_batches(
+            return self._gather(
                 key, self._shard_x, self._shard_y,
                 self._shard_off, self._shard_len, S, Bsz,
             )
         xs, ys = [], []
         for x, y in self.shards:
+            if len(y) == 0:
+                # retired (merged-away) client: zero-filled dummy batches —
+                # round_fn masks its delta/loss/weight via active=0
+                xs.append(np.zeros((S, Bsz) + x.shape[1:], x.dtype))
+                ys.append(np.zeros((S, Bsz) + y.shape[1:], y.dtype))
+                continue
             idx = self.rng.integers(0, len(y), size=(S, Bsz))
             xs.append(x[idx])
             ys.append(y[idx])
@@ -221,7 +295,12 @@ class FederatedSimulator:
         return steps_mask, round_mask, poison
 
     def _enqueue_stale(self, t: int, x_before, x_locals):
-        """Record delayed clients' deltas for later arrival."""
+        """Record delayed clients' deltas for later arrival, together with
+        the client's CURRENT data weight: if the client is merged away
+        before the delta arrives, ``merged_data_sizes`` zeroes
+        ``self.weights[cid]`` (its share moves to the representative), but
+        the in-flight delta still answers for the pre-merge share (paper
+        §IV.D — the intermediary takes over only from the merge onward)."""
         delays = self._delay_sched[t]
         for cid in np.flatnonzero(delays > 0):
             if self.active[cid] == 0:
@@ -231,18 +310,21 @@ class FederatedSimulator:
                 - np.asarray(g, np.float64),
                 x_locals, x_before,
             )
-            self._stale.append((t + int(delays[cid]), cid, dx))
+            self._stale.append(
+                (t + int(delays[cid]), cid, dx, float(self.weights[cid]))
+            )
 
     def _apply_stale_updates(self, t: int):
-        """Server applies stale deltas that arrive at round t (weighted by
-        the client's data share, scaled by the global lr)."""
+        """Server applies stale deltas that arrive at round t, weighted by
+        the sender's data share at SEND time (scaled by the global lr).
+        Merging preserves the total weight, so the denominator is stable."""
         arrived = [s for s in self._stale if s[0] <= t]
         if not arrived:
             return
         self._stale = [s for s in self._stale if s[0] > t]
         total = float(self.weights.sum())
-        for _, cid, dx in arrived:
-            w = self.fl.algo.lr_global * float(self.weights[cid]) / total
+        for _, cid, dx, w_send in arrived:
+            w = self.fl.algo.lr_global * w_send / total
             self.params = jax.tree_util.tree_map(
                 lambda p, d: (np.asarray(p, np.float64) + w * d).astype(
                     np.asarray(p).dtype
@@ -250,6 +332,10 @@ class FederatedSimulator:
                 self.params, dx,
             )
         self.params = jax.tree_util.tree_map(jnp.asarray, self.params)
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, P())
+            )
 
     # ------------------------------------------------------------------
     def _correlate(self, x_locals) -> np.ndarray:
@@ -300,12 +386,18 @@ class FederatedSimulator:
             self.c_locals = jax.tree_util.tree_map(
                 jnp.asarray, apply_merge(plan, jax.device_get(self.c_locals))
             )
-        # intermediary node inherits the union of member data
+        # intermediary node inherits the union of member data; retired
+        # members keep their slot (fixed shapes everywhere) but give up
+        # their rows — otherwise the flat device buffers hold every merged
+        # row twice and the gather keeps sampling retired clients
         for group in plan.groups:
             rep = group[0]
             xs = np.concatenate([self.shards[j][0] for j in group])
             ys = np.concatenate([self.shards[j][1] for j in group])
             self.shards[rep] = (xs, ys)
+            for j in group[1:]:
+                xj, yj = self.shards[j]
+                self.shards[j] = (xj[:0], yj[:0])
         self.weights = merged_data_sizes(plan, self.weights).astype(np.float32)
         self.active = plan.active.astype(np.float32)
         if self.fl.pipeline == "device":
@@ -315,9 +407,14 @@ class FederatedSimulator:
     # ------------------------------------------------------------------
     def run(self, verbose: bool = False) -> List[RoundRecord]:
         fl = self.fl
+        self._prefetched = None
         for t in range(fl.num_rounds):
             t0 = time.time()
-            batches = self._sample_batches(t)
+            if self._prefetched is not None and self._prefetched[0] == t:
+                batches = self._prefetched[1]
+            else:
+                batches = self._sample_batches(t)
+            self._prefetched = None
             steps_mask, round_mask, poison = self._round_masks(t)
             # round_fn donates params/controls; keep a pre-round copy only
             # on rounds where a delayed client will actually need it
@@ -346,28 +443,44 @@ class FederatedSimulator:
                 jnp.asarray(round_mask),
                 jnp.asarray(poison),
             )
+            will_merge = fl.merge_enabled and (
+                t == fl.merge_round or t in fl.merge_rounds
+            )
+            overlap = fl.pipeline == "device" and fl.overlap_gather
+            if overlap and not will_merge and t + 1 < fl.num_rounds:
+                # double buffer: round t+1's gather is enqueued now, while
+                # round t's round_fn is still computing (async dispatch) —
+                # the gather leaves the round loop's critical path
+                self._prefetched = (t + 1, self._sample_batches(t + 1))
             if delayed_now:
                 self._enqueue_stale(t, x_before, x_locals)
+            # snapshot BEFORE _merge mutates self.active: this round's
+            # training and uploads ran against the pre-merge active set,
+            # so its communication/loss accounting must too
+            active_round = self.active.copy()
             merged: Tuple[Tuple[int, ...], ...] = ()
-            if fl.merge_enabled and (
-                t == fl.merge_round or t in fl.merge_rounds
-            ):
+            if will_merge:
                 merged = self._merge(x_locals)
+                if overlap and t + 1 < fl.num_rounds:
+                    # shard buffers were rebuilt; gather from the merged
+                    # layout (no overlap win on merge rounds)
+                    self._prefetched = (t + 1, self._sample_batches(t + 1))
             self._apply_stale_updates(t)
 
             acc = self.eval_fn(self.params)
-            n_active = int(self.active.sum())
-            sent = int((self.active * round_mask).sum())
+            sent = int((active_round * round_mask).sum())
             mean_loss = float(
-                np.sum(np.asarray(losses) * self.active) / max(self.active.sum(), 1)
+                np.sum(np.asarray(losses) * active_round)
+                / max(active_round.sum(), 1)
             )
             rec = RoundRecord(
                 round=t,
                 accuracy=acc,
                 mean_loss=mean_loss,
-                active_nodes=n_active,
+                active_nodes=int(active_round.sum()),
                 updates_sent=sent,
                 bytes_sent=sent * self._param_bytes,
+                active_nodes_end=int(self.active.sum()),
                 merged_groups=merged,
                 wall_s=time.time() - t0,
             )
@@ -375,24 +488,33 @@ class FederatedSimulator:
             if verbose:
                 print(
                     f"round {t:2d} acc={acc:.4f} loss={mean_loss:.4f} "
-                    f"active={n_active} sent={sent}"
+                    f"active={rec.active_nodes} sent={sent}"
                     + (f" merged={merged}" if merged else "")
                 )
         return self.history
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "batch"))
 def _gather_batches(key, xs, ys, offsets, lengths, steps: int, batch: int):
     """(K, steps, batch, ...) uniform batch gather over flat shards.
 
     ``xs``/``ys`` hold all clients' rows back to back; client k owns rows
     [offsets[k], offsets[k] + lengths[k]). Indices are drawn with integer
     ``jax.random.randint`` (exact for any shard size — no f32 rounding of
-    row ids). Runs jitted on device — the per-round batch tensors are
-    produced and consumed without touching host memory."""
+    row ids). Retired (merged-away) clients own a zero-length slot: their
+    draw is clamped to one in-bounds dummy row whose content never
+    matters (round_fn masks their delta, loss, and weight via active=0) —
+    no retired data is sampled and no shapes change. Runs jitted on
+    device — the per-round batch tensors are produced and consumed
+    without touching host memory."""
     K = lengths.shape[0]
     row = jax.random.randint(
-        key, (K, steps, batch), minval=0, maxval=lengths[:, None, None]
+        key, (K, steps, batch), minval=0,
+        maxval=jnp.maximum(lengths, 1)[:, None, None],
     )
-    idx = offsets[:, None, None] + row
+    idx = jnp.minimum(offsets[:, None, None] + row, xs.shape[0] - 1)
     return {"x": jnp.take(xs, idx, axis=0), "y": jnp.take(ys, idx, axis=0)}
+
+
+_gather_batches_jit = jax.jit(
+    _gather_batches, static_argnames=("steps", "batch")
+)

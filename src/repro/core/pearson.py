@@ -178,3 +178,30 @@ def pearson_tree(
         else:
             gram, sums = _accumulate_chunk(gram, sums, v)
     return finalize_pearson(gram, sums, n_cols, eps=eps)
+
+
+def pearson_round_program(
+    exclude_constant: bool = False,
+    sample: int = 0,
+    seed: int = 0,
+    compute_dtype=None,
+):
+    """The round-level correlation program as ONE jit-able function over a
+    stacked (K, ...) client pytree — the streaming ``pearson_tree`` path,
+    closed over its host-side options so ``jax.jit``/``.lower`` see a
+    single tree argument. Under a mesh this is what the pod-sharded
+    dry-run analyzes: per-leaf (gram, sums) accumulation, with the K x K
+    reduction as the only cross-pod collective — no (K, M) client matrix
+    is ever materialized.
+    """
+
+    def program(stacked_params):
+        return pearson_tree(
+            stacked_params,
+            exclude_constant=exclude_constant,
+            sample=sample,
+            seed=seed,
+            compute_dtype=compute_dtype,
+        )
+
+    return program

@@ -49,6 +49,8 @@ def _pad_chunk(X: jnp.ndarray):
     Kp = int(np.ceil(max(K, sub) / sub) * sub)
     blk = M_BLK if m >= M_BLK else int(np.ceil(max(m, 128) / 128) * 128)
     Mp = int(np.ceil(m / blk) * blk)
+    if (Kp, Mp) == (K, m):
+        return X, blk  # already tile-aligned: no zero-fill copy
     Xp = jnp.zeros((Kp, Mp), X.dtype).at[:K, :m].set(X)
     return Xp, blk
 

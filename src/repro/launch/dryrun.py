@@ -36,6 +36,19 @@ _DTYPE_BYTES = {
 }
 
 
+def peak_bytes(mem) -> int:
+    """peak_memory_in_bytes where jaxlib provides it; else the
+    argument+output+temp sum as a live-bytes proxy (jaxlib <= 0.4.x)."""
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return int(peak)
+    return int(
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+    )
+
+
 def collective_bytes(hlo_text: str):
     """Per-collective-op byte totals from the (per-device, post-SPMD)
     optimized HLO. For every collective instruction we take the LARGEST
@@ -119,7 +132,7 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, save_hlo: bool = False,
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with mesh:
         params = ST.param_structs(cfg)
         pspecs = SH.param_specs(cfg, params, mesh)
         psh = SH.to_shardings(mesh, pspecs)
@@ -185,7 +198,7 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, save_hlo: bool = False,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": peak_bytes(mem),
         }
         cost = compiled.cost_analysis()
         if isinstance(cost, list):
@@ -303,7 +316,7 @@ def run_costing(arch: str, shape_name: str, mesh_kind: str,
     cfg2, L2 = _depth_variant(cfg, 3)
     MFLAGS.UNROLL_SCANS = True
     try:
-        with jax.sharding.set_mesh(mesh):
+        with mesh:
             c1 = _extract(_lower_compile(cfg1, shape, mesh))
             c2 = _extract(_lower_compile(cfg2, shape, mesh))
     finally:

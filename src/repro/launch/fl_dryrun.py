@@ -10,15 +10,18 @@ Programs (K = logical pod-clients, stacked on a leading axis sharded over
   fl_round(K)      — SCAFFOLD round: per-client local SGD steps (vmap over
                      the pod-sharded client axis), weighted delta
                      aggregation = the cross-pod collective.
-  pearson_round(K) — the technique's own traffic: K x K Pearson matrix
-                     over flattened per-client params (K sharded over pod,
-                     M sharded over data x model).
+  pearson_round(K) — the technique's own traffic: the PRODUCTION streaming
+                     ``pearson_tree`` path over the stacked client pytree
+                     (K sharded over pod, features over data x model) —
+                     per-leaf (gram, sums) accumulation, never a
+                     materialized (K, M) client matrix.
 
 Baseline = K=8 clients; post-merge = K=4 intermediary nodes. The delta in
 collective bytes between the two lowered programs is the communication the
 merging algorithm elides.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--arch qwen3-1.7b]
+  PYTHONPATH=src python -m repro.launch.fl_dryrun --smoke   # CPU CI mesh
 """
 import argparse
 import json
@@ -29,21 +32,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.pearson import pearson_matrix
-from repro.launch.dryrun import collective_bytes
-from repro.launch.mesh import make_production_mesh
+from repro.core.pearson import pearson_round_program
+from repro.launch.dryrun import collective_bytes, peak_bytes as _peak_bytes
+from repro.launch.mesh import make_fl_smoke_mesh, make_production_mesh
 from repro.launch import steps as ST
 from repro import sharding as SH
 from repro.utils.pytree import tree_size
-
-
-def _client_specs(pspec_tree):
-    """Prepend a 'pod'-sharded client axis to every param spec."""
-    return jax.tree_util.tree_map(
-        lambda s: P(*(("pod",) + tuple(s))),
-        pspec_tree,
-        is_leaf=lambda x: isinstance(x, P),
-    )
 
 
 def make_fl_round(cfg, lr_local=1e-3, local_steps=4):
@@ -86,14 +80,17 @@ def make_fl_round(cfg, lr_local=1e-3, local_steps=4):
     return fl_round
 
 
-def lower_fl_round(arch: str, K: int, seq: int = 512, batch_per_client: int = 16):
+def lower_fl_round(arch: str, K: int, seq: int = 512, batch_per_client: int = 16,
+                   mesh=None, reduced: bool = False):
     cfg = get_config(arch)
-    mesh = make_production_mesh(multi_pod=True)
-    with jax.sharding.set_mesh(mesh):
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=True)
+    with mesh:
         params = ST.param_structs(cfg)
         pspecs = SH.param_specs(cfg, params, mesh)
         psh = SH.to_shardings(mesh, pspecs)
-        csh = SH.to_shardings(mesh, _client_specs(pspecs))
+        csh = SH.to_shardings(mesh, SH.client_specs(pspecs))
         c_locals = jax.tree_util.tree_map(
             lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), params
         )
@@ -115,31 +112,42 @@ def lower_fl_round(arch: str, K: int, seq: int = 512, batch_per_client: int = 16
         return {
             "program": "fl_round", "arch": arch, "K": K,
             "collectives": coll, "collective_bytes": sum(coll.values()),
-            "peak_bytes": mem.peak_memory_in_bytes,
+            "peak_bytes": _peak_bytes(mem),
             "param_count": tree_size(params),
         }
 
 
-def lower_pearson_round(arch: str, K: int):
-    """K x M correlation with K sharded over 'pod', M over data x model —
-    the cross-pod gather IS the technique's communication cost."""
+def lower_pearson_round(arch: str, K: int, mesh=None, reduced: bool = False):
+    """The streaming ``pearson_tree`` round program with K sharded over
+    'pod' and every leaf's feature dims over data x model (the same param
+    specs the training step uses) — the analyzed collective is the real
+    production path: per-leaf partial (gram, sums) contractions whose K x K
+    reduction IS the technique's cross-pod communication cost. The old
+    materialized ``pearson_matrix`` stand-in over a flat (K, M) matrix is
+    gone; nothing here lowers a (K, M) concatenation."""
     cfg = get_config(arch)
-    mesh = make_production_mesh(multi_pod=True)
-    params = ST.param_structs(cfg)
-    M_total = tree_size(params)
-    # round M down to a shardable multiple (analysis-only stand-in)
-    M_pad = (M_total // (16 * 16)) * 16 * 16
-    with jax.sharding.set_mesh(mesh):
-        X = jax.ShapeDtypeStruct((K, M_pad), jnp.bfloat16)
-        xsh = NamedSharding(mesh, P("pod", ("data", "model")))
-        fn = jax.jit(pearson_matrix, in_shardings=(xsh,),
-                     out_shardings=NamedSharding(mesh, P()))
-        compiled = fn.lower(X).compile()
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=True)
+    with mesh:
+        params = ST.param_structs(cfg)
+        pspecs = SH.param_specs(cfg, params, mesh)
+        csh = SH.to_shardings(mesh, SH.client_specs(pspecs))
+        stacked = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), params
+        )
+        fn = jax.jit(
+            pearson_round_program(compute_dtype=jnp.bfloat16),
+            in_shardings=(csh,),
+            out_shardings=NamedSharding(mesh, P()),
+        )
+        compiled = fn.lower(stacked).compile()
         coll = collective_bytes(compiled.as_text())
         return {
-            "program": "pearson_round", "arch": arch, "K": K, "M": M_pad,
+            "program": "pearson_round", "arch": arch, "K": K,
+            "M": tree_size(params), "path": "pearson_tree",
             "collectives": coll, "collective_bytes": sum(coll.values()),
-            "peak_bytes": compiled.memory_analysis().peak_memory_in_bytes,
+            "peak_bytes": _peak_bytes(compiled.memory_analysis()),
         }
 
 
@@ -147,21 +155,31 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the small (pod=2, data=2, "
+                         "model=1) CPU mesh — the CI smoke; set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4 (or more)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
+    mesh = make_fl_smoke_mesh() if args.smoke else None
+    tag_suffix = "__smoke" if args.smoke else ""
     recs = []
     for K, tag in ((8, "baseline"), (4, "post_merge")):
-        r1 = lower_fl_round(args.arch, K)
+        r1 = lower_fl_round(args.arch, K, seq=64 if args.smoke else 512,
+                            batch_per_client=4 if args.smoke else 16,
+                            mesh=mesh, reduced=args.smoke)
         r1["stage"] = tag
         print(f"fl_round     K={K}: coll_bytes/dev={r1['collective_bytes']:.3e} "
               f"peak={r1['peak_bytes']/2**30:.2f}GiB", flush=True)
-        r2 = lower_pearson_round(args.arch, K)
+        r2 = lower_pearson_round(args.arch, K, mesh=mesh, reduced=args.smoke)
         r2["stage"] = tag
         print(f"pearson      K={K}: coll_bytes/dev={r2['collective_bytes']:.3e} "
               f"{r2['collectives']}", flush=True)
         recs += [r1, r2]
-    with open(os.path.join(args.out, f"fl_round__{args.arch}.json"), "w") as f:
+    out = os.path.join(args.out, f"fl_round__{args.arch}{tag_suffix}.json")
+    with open(out, "w") as f:
         json.dump(recs, f, indent=2)
+    print("FL_DRYRUN_OK")
 
 
 if __name__ == "__main__":

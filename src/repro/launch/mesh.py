@@ -22,3 +22,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU tests of the same code paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_fl_mesh(pods: int = 1):
+    """Federation-only mesh: a single ``pod`` axis carrying the stacked
+    client dimension. pods=1 runs on one real device (the CPU sim's
+    mesh-aware mode); pods>1 needs that many (possibly fake) devices."""
+    return jax.make_mesh((pods,), ("pod",))
+
+
+def make_fl_smoke_mesh():
+    """(pod=2, data=2, model=1) — the smallest mesh that still exercises
+    cross-pod collectives in the sharded FL dry-run on CPU CI (4 fake
+    devices via --xla_force_host_platform_device_count)."""
+    return jax.make_mesh((2, 2, 1), ("pod", "data", "model"))

@@ -145,3 +145,47 @@ def to_shardings(mesh: Mesh, spec_tree):
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Federation ('pod') axis: one device-layout contract for every stacked
+# client tensor — params'/controls' leading K axis, the flat shard-row
+# buffers, and the per-round batch stacks all shard the same way so the
+# round function, merge apply, and batch gather agree without reshards.
+# ---------------------------------------------------------------------------
+
+
+def client_axis(mesh: Mesh, K: int, axis: str = "pod") -> Optional[str]:
+    """The mesh axis carrying the stacked client dimension, or None when the
+    mesh has no such axis / K doesn't divide it (replicated fallback)."""
+    if axis not in mesh.axis_names:
+        return None
+    return _maybe(K, axis, mesh)
+
+
+def client_specs(pspec_tree, axis: str = "pod"):
+    """Prepend an ``axis``-sharded client dimension to every param spec
+    (stacked (K, ...) client trees on a mesh that also shards features)."""
+    return jax.tree_util.tree_map(
+        lambda s: P(*((axis,) + tuple(s))),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def client_stack_shardings(mesh: Mesh, tree, axis: str = "pod"):
+    """NamedShardings for a stacked (K, ...) pytree: the leading client axis
+    over ``axis``, feature dims replicated — the simulator contract, where
+    per-leaf feature specs don't exist (params are replicated per client)."""
+
+    def rule(leaf):
+        a = client_axis(mesh, int(leaf.shape[0]), axis)
+        return NamedSharding(mesh, P(*((a,) + (None,) * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(rule, tree)
+
+
+def row_sharding(mesh: Mesh, nrows: int, axis: str = "pod") -> NamedSharding:
+    """Sharding for a flat row buffer (the concatenated client shards):
+    rows over the federation axis when they divide it, else replicated."""
+    return NamedSharding(mesh, P(client_axis(mesh, nrows, axis)))

@@ -55,6 +55,17 @@ def tree_size(tree) -> int:
     )
 
 
+def tree_bytes(tree) -> int:
+    """Total on-the-wire byte size: per-leaf elements * dtype.itemsize
+    (bf16 leaves count 2 bytes, f32 leaves 4 — no f32 assumption)."""
+    return int(
+        sum(
+            int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+            for x in jax.tree_util.tree_leaves(tree)
+        )
+    )
+
+
 def tree_cast(tree, dtype):
     return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
 

@@ -58,7 +58,7 @@ def _shards(seed=0, poison_ids=(), n_per=200):
 
 
 def _sim(scenario=None, merge=True, rounds=6, algo="scaffold", seed=0,
-         poison_ids=(), threshold=0.6):
+         poison_ids=(), threshold=0.6, mesh=None):
     x_te, y_te = _blobs(500, seed + 99)
     fl = FLConfig(
         algo=AlgoConfig(algorithm=algo, lr_local=0.1),
@@ -78,6 +78,7 @@ def _sim(scenario=None, merge=True, rounds=6, algo="scaffold", seed=0,
         client_shards=_shards(seed, poison_ids),
         fl=fl,
         scenario=scenario or Scenario(),
+        mesh=mesh,
     )
 
 
@@ -168,8 +169,12 @@ def test_periodic_remerging():
     sim = _sim(threshold=0.3)
     sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "merge_rounds": (4,)})
     hist = sim.run()
-    n2 = hist[2].active_nodes   # after first merge (merge_round=2)
-    n4 = hist[4].active_nodes   # after re-merge
+    # active_nodes reports the set the round TRAINED with (pre-merge);
+    # active_nodes_end is the population after the round's merge
+    n2 = hist[2].active_nodes_end   # after first merge (merge_round=2)
+    n4 = hist[4].active_nodes_end   # after re-merge
+    assert hist[2].active_nodes == NUM_CLIENTS
+    assert hist[3].active_nodes == n2
     assert n2 < NUM_CLIENTS
     assert n4 <= n2
 

@@ -1,0 +1,253 @@
+"""Regression tests for merge-round accounting, retired-client data leaks,
+stale-delta weighting across merges, dtype-aware byte accounting, the
+double-buffered gather, and the mesh-aware (pod-axis) simulator mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedSimulator, FLConfig, Scenario
+from repro.data.faults import PacketLoss
+
+from test_federation import (
+    DIM,
+    NUM_CLASSES,
+    NUM_CLIENTS,
+    _loss,
+    _shards,
+    _sim,
+)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: merge-round records describe the round as it RAN (pre-merge)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_round_record_parity_hand_computed():
+    """The merge round trained all K clients, so its record must report K
+    senders and the mean loss over all K — compared against the losses the
+    round function actually returned."""
+    sim = _sim(threshold=0.3)
+    recorded = []
+    orig = sim.round_fn
+
+    def recording(*args):
+        out = orig(*args)
+        recorded.append(np.asarray(out[4]))
+        return out
+
+    sim.round_fn = recording
+    hist = sim.run()
+    m = hist[2]
+    assert m.merged_groups
+    assert m.active_nodes == NUM_CLIENTS          # pre-merge trained set
+    assert m.updates_sent == NUM_CLIENTS          # K clients uploaded
+    assert m.bytes_sent == NUM_CLIENTS * sim._param_bytes
+    retired = sum(len(g) - 1 for g in m.merged_groups)
+    assert m.active_nodes_end == NUM_CLIENTS - retired
+    np.testing.assert_allclose(m.mean_loss, recorded[2].mean(), rtol=1e-5)
+    # the round AFTER the merge trains the shrunk population
+    assert hist[3].active_nodes == m.active_nodes_end
+    assert hist[3].updates_sent == m.active_nodes_end
+    # non-merge rounds: both counts agree
+    assert all(
+        r.active_nodes == r.active_nodes_end
+        for r in hist
+        if not r.merged_groups
+    )
+
+
+def test_merge_round_accounting_under_packet_loss():
+    """Pre-merge accounting composes with drop-mode packet loss: the merge
+    round reports (K - dropped) senders, hand-computed from the schedule."""
+    sc = Scenario(
+        name="drop",
+        packet_loss=PacketLoss(prob=1.0, drop_update=True,
+                               affected_frac=0.25, seed=2),
+    )
+    sim = _sim(scenario=sc, threshold=0.3)
+    dropped_at_merge = int(sim._loss_sched[2].sum())
+    hist = sim.run()
+    assert hist[2].merged_groups
+    assert hist[2].updates_sent == NUM_CLIENTS - dropped_at_merge
+    assert hist[2].bytes_sent == hist[2].updates_sent * sim._param_bytes
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: retired clients give up their rows (no duplicates on device)
+# ---------------------------------------------------------------------------
+
+
+def test_no_duplicate_rows_after_merge():
+    sim = _sim(threshold=0.3)
+    total = sum(len(y) for _, y in sim.shards)
+    hist = sim.run()
+    groups = hist[2].merged_groups
+    assert groups
+    # every training row exists exactly once in the flat device buffers
+    assert int(sim._shard_x.shape[0]) == total
+    assert int(sim._shard_y.shape[0]) == total
+    assert sum(len(y) for _, y in sim.shards) == total
+    # retired slots are empty; the representative holds the union
+    for g in groups:
+        for j in g[1:]:
+            assert len(sim.shards[j][1]) == 0
+        assert len(sim.shards[g[0]][1]) == len(g) * 200
+    # device-side lengths agree with the host bookkeeping
+    np.testing.assert_array_equal(
+        np.asarray(sim._shard_len), [len(y) for _, y in sim.shards]
+    )
+
+
+def test_retired_clients_learn_nothing_after_merge():
+    """Training still converges with retired slots drawing dummy rows, and
+    both pipelines survive crossing the merge with empty shards."""
+    for pipeline in ("device", "host"):
+        sim = _sim(threshold=0.3, seed=13)
+        sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "pipeline": pipeline})
+        hist = sim.run()
+        assert hist[2].merged_groups
+        assert hist[-1].accuracy > 0.85
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: a delayed delta survives its sender being merged away
+# ---------------------------------------------------------------------------
+
+
+def test_stale_delta_survives_merge():
+    """A delta enqueued before the merge is applied with the sender's
+    send-time weight even after merged_data_sizes zeroes the slot."""
+    sim = _sim(rounds=1, merge=False)
+    cid = 3
+    w_send = float(sim.weights[cid])
+    total = float(sim.weights.sum())
+    ones = jax.tree_util.tree_map(
+        lambda p: np.ones_like(np.asarray(p, np.float64)), sim.params
+    )
+    sim._stale = [(0, cid, ones, w_send)]
+    # emulate the merge: the sender's weight moved to its representative
+    sim.weights[0] += w_send
+    sim.weights[cid] = 0.0
+    before = jax.device_get(sim.params)
+    sim._apply_stale_updates(0)
+    after = jax.device_get(sim.params)
+    shift = sim.fl.algo.lr_global * w_send / total
+    assert shift > 0
+    np.testing.assert_allclose(
+        np.asarray(after["w"]), np.asarray(before["w"]) + shift, rtol=1e-5
+    )
+
+
+def test_enqueue_stale_records_send_time_weight():
+    from repro.data.faults import NetworkDelay
+
+    sc = Scenario(
+        name="delay",
+        network_delay=NetworkDelay(max_delay=2, affected_frac=0.25, seed=1),
+    )
+    sim = _sim(scenario=sc, rounds=2, merge=False)
+    sim._delay_sched[:] = 0
+    sim._delay_sched[0, 2] = 5  # client 2's round-0 delta arrives at round 5
+    w2 = float(sim.weights[2])
+    sim.run()
+    assert any(
+        cid == 2 and w == w2 for (_, cid, _, w) in sim._stale
+    ), sim._stale
+
+
+# ---------------------------------------------------------------------------
+# bugfix 4: bytes_sent respects per-leaf dtypes
+# ---------------------------------------------------------------------------
+
+
+def test_param_bytes_per_leaf_dtype():
+    def init_mixed(key):
+        return {
+            "w": jnp.zeros((DIM, NUM_CLASSES), jnp.bfloat16),
+            "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+        }
+
+    sim = FederatedSimulator(
+        init_params_fn=init_mixed,
+        loss_fn=_loss,
+        eval_fn=lambda p: 0.0,
+        client_shards=_shards(0),
+        fl=FLConfig(num_rounds=1),
+    )
+    assert sim._param_bytes == DIM * NUM_CLASSES * 2 + NUM_CLASSES * 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: double-buffered gather and mesh-aware mode
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_gather_matches_sync():
+    """The prefetch only reorders dispatch — trajectories are identical."""
+    hists = {}
+    for overlap in (False, True):
+        sim = _sim(threshold=0.3, seed=11)
+        sim.fl = sim.fl.__class__(
+            **{**sim.fl.__dict__, "overlap_gather": overlap}
+        )
+        hists[overlap] = sim.run()
+    a, b = hists[False], hists[True]
+    assert [r.merged_groups for r in a] == [r.merged_groups for r in b]
+    assert [r.updates_sent for r in a] == [r.updates_sent for r in b]
+    np.testing.assert_allclose(
+        [r.accuracy for r in a], [r.accuracy for r in b], atol=1e-6
+    )
+
+
+def test_device_host_parity_across_merge_under_packet_loss():
+    """Both pipelines cross a merge round under epoch-truncating packet
+    loss; the schedule-driven accounting must agree exactly."""
+    hists = {}
+    for pipeline in ("device", "host"):
+        sc = Scenario(
+            name="pl",
+            packet_loss=PacketLoss(prob=1.0, drop_update=True,
+                                   affected_frac=0.25, seed=5),
+        )
+        sim = _sim(scenario=sc, threshold=0.3, seed=9)
+        sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "pipeline": pipeline})
+        hists[pipeline] = sim.run()
+    dev, host = hists["device"], hists["host"]
+    assert dev[2].merged_groups and host[2].merged_groups
+    # pre-merge rounds are schedule-driven: identical accounting
+    for d, h in zip(dev[:3], host[:3]):
+        assert d.updates_sent == h.updates_sent
+        assert d.active_nodes == h.active_nodes == NUM_CLIENTS
+    assert abs(dev[-1].accuracy - host[-1].accuracy) < 0.1
+
+
+def test_mesh_mode_pod_axis_matches_default():
+    """mesh-aware mode on a 1-device pod mesh reproduces the default device
+    pipeline (same batches, same merge, same accuracy)."""
+    from repro.launch.mesh import make_fl_mesh
+
+    base = _sim(threshold=0.3, seed=11).run()
+    meshed = _sim(threshold=0.3, seed=11, mesh=make_fl_mesh(pods=1)).run()
+    assert [r.merged_groups for r in base] == [r.merged_groups for r in meshed]
+    np.testing.assert_allclose(
+        [r.accuracy for r in base], [r.accuracy for r in meshed], atol=1e-6
+    )
+    assert meshed[2].active_nodes == NUM_CLIENTS
+    assert meshed[2].active_nodes_end < NUM_CLIENTS
+
+
+def test_mesh_mode_rejects_host_pipeline():
+    from repro.launch.mesh import make_fl_mesh
+
+    fl = FLConfig(num_rounds=1, pipeline="host")
+    with pytest.raises(ValueError, match="mesh-aware"):
+        FederatedSimulator(
+            init_params_fn=lambda k: {"w": jnp.zeros((DIM, NUM_CLASSES))},
+            loss_fn=_loss,
+            eval_fn=lambda p: 0.0,
+            client_shards=_shards(0),
+            fl=fl,
+            mesh=make_fl_mesh(pods=1),
+        )
