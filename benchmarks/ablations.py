@@ -1,81 +1,64 @@
 """Ablations the paper flags as critical ('carefully calibrating the
 similarity threshold and the timing of merging is vital'): threshold sweep,
-merge-round sweep, max-group-size, alpha mode — on the fast toy task so the
-whole grid runs in seconds."""
+merge-round sweep, max-group-size, alpha mode, merge policy, and the
+robust-aggregation baselines — every point in the grid is one
+ExperimentSpec on the toy blobs task, so the whole grid runs in seconds."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AlgoConfig, FederatedSimulator, FLConfig, Scenario
+from repro.launch.experiment import ExperimentSpec, run_experiment
 
-NUM_CLASSES, DIM, K = 4, 8, 8
-_CENTERS = np.random.default_rng(42).normal(size=(NUM_CLASSES, DIM)) * 3
-
-
-def _blobs(n, seed=0):
-    rng = np.random.default_rng(seed)
-    y = rng.integers(0, NUM_CLASSES, n)
-    x = _CENTERS[y] + rng.normal(size=(n, DIM))
-    return x.astype(np.float32), y.astype(np.int32)
+K = 8
 
 
-def _init(key):
-    k1, _ = jax.random.split(key)
-    return {"w": jax.random.normal(k1, (DIM, NUM_CLASSES)) * 0.01,
-            "b": jnp.zeros((NUM_CLASSES,))}
-
-
-def _loss(params, batch):
-    logits = batch["x"] @ params["w"] + params["b"]
-    lse = jax.nn.logsumexp(logits, -1)
-    gold = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32), 1)[:, 0]
-    return jnp.mean(lse - gold)
-
-
-def _run_once(threshold=0.6, merge_round=2, max_group=3, alpha="uniform",
-              poison=(0, 1), rounds=8, seed=0, algo="scaffold", merge=True,
-              aggregator="mean"):
-    x_te, y_te = _blobs(400, seed + 99)
-    shards = []
-    rng = np.random.default_rng(seed)
-    x, y = _blobs(K * 150, seed)
-    for i in range(K):
-        cls = [(i % NUM_CLASSES), ((i + 1) % NUM_CLASSES)]
-        idx = np.flatnonzero(np.isin(y, cls))[:150]
-        yy = y[idx].copy()
-        if i in poison:
-            yy = (yy + 1) % NUM_CLASSES
-        shards.append((x[idx], yy))
-    fl = FLConfig(
-        algo=AlgoConfig(algorithm=algo, lr_local=0.1,
-                        prox_mu=0.1 if algo == "fedprox" else 0.0,
-                        aggregator=aggregator),
-        num_rounds=rounds, local_epochs=2, steps_per_epoch=5, batch_size=16,
-        merge_enabled=merge, merge_round=merge_round, threshold=threshold,
-        max_group_size=max_group, alpha=alpha, seed=seed,
+def _spec(threshold=0.6, merge_at=(2,), max_group=3, alpha="uniform",
+          poison=(0, 1), rounds=8, seed=0, algo="scaffold", merge=True,
+          aggregator="mean", merge_policy="pearson") -> ExperimentSpec:
+    return ExperimentSpec(
+        model="linear",
+        dataset="blobs",
+        n_train=K * 150,
+        n_test=400,
+        data_kwargs={"num_classes": 4, "dim": 8},
+        partition="class_pairs",
+        partition_kwargs={"n_per": 150},
+        num_clients=K,
+        algo=algo,
+        lr_local=0.1,
+        prox_mu=0.1 if algo == "fedprox" else 0.0,
+        aggregator=aggregator,
+        merge=merge,
+        merge_policy=merge_policy,
+        merge_at=merge_at,
+        threshold=threshold,
+        max_group_size=max_group,
+        alpha=alpha,
+        scenario="poisoning",
+        scenario_kwargs={"client_ids": list(poison), "num_classes": 4},
+        rounds=rounds,
+        local_epochs=2,
+        steps_per_epoch=5,
+        batch_size=16,
+        seed=seed,
     )
-    sim = FederatedSimulator(
-        init_params_fn=_init, loss_fn=_loss,
-        eval_fn=lambda p: float(
-            ((x_te @ np.asarray(p["w"]) + np.asarray(p["b"])).argmax(-1) == y_te).mean()
-        ),
-        client_shards=shards, fl=fl, scenario=Scenario(),
-    )
-    hist = sim.run()
-    return float(np.mean([r.accuracy for r in hist[-3:]])), hist[-1].active_nodes_end
+
+
+def _run_once(**kw):
+    _, hist = run_experiment(_spec(**kw), verbose=False)
+    return (float(np.mean([r.accuracy for r in hist[-3:]])),
+            hist[-1].active_nodes_end)
 
 
 def run():
-    print("threshold sweep (merge_round=2, poisoned clients {0,1}):")
+    print("threshold sweep (merge_at=(2,), poisoned clients {0,1}):")
     for th in (0.3, 0.5, 0.7, 0.9, 0.99):
         acc, nodes = _run_once(threshold=th)
         print(f"  threshold={th:4.2f}: acc={acc:.4f} active_nodes={nodes}")
     print("merge-round sweep (threshold=0.6):")
     for mr in (0, 1, 2, 4, 6):
-        acc, nodes = _run_once(merge_round=mr)
-        print(f"  merge_round={mr}: acc={acc:.4f} active_nodes={nodes}")
+        acc, nodes = _run_once(merge_at=(mr,))
+        print(f"  merge_at=({mr},): acc={acc:.4f} active_nodes={nodes}")
     print("max_group_size sweep:")
     for mg in (2, 3, 4, 8):
         acc, nodes = _run_once(max_group=mg)
@@ -84,6 +67,10 @@ def run():
     for al in ("uniform", "data"):
         acc, nodes = _run_once(alpha=al)
         print(f"  alpha={al}: acc={acc:.4f} active_nodes={nodes}")
+    print("merge policy (who merges, under poisoning):")
+    for pol in ("pearson", "cosine", "random-pairs", "none"):
+        acc, nodes = _run_once(merge_policy=pol)
+        print(f"  policy={pol:12s}: acc={acc:.4f} active_nodes={nodes}")
     print("algorithm x merging (under poisoning):")
     for algo in ("scaffold", "fedprox", "fedavg"):
         for merge in (True, False):

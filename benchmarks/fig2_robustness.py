@@ -8,6 +8,7 @@ Paper's claims after 10 rounds (CNN, MNIST, merge at round 4):
 We reproduce the protocol on the synthetic-MNIST stand-in (DESIGN.md §6):
 the *relative* claim (merge >= baseline under each condition) is the
 reproduction target; absolute numbers differ with the dataset.
+Each run is one ExperimentSpec differing only in (scenario, merge).
 Results are cached to experiments/fl/fig2.json.
 """
 from __future__ import annotations
@@ -15,9 +16,7 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
-
-from repro.launch.train import run_experiment
+from repro.launch.experiment import ExperimentSpec, run_experiment
 
 SCENARIOS = ("normal", "packet_loss", "poisoning")
 PAPER = {"normal": 0.82, "packet_loss": 0.73, "poisoning": 0.66}
@@ -30,19 +29,21 @@ def run(rounds: int = 10, seed: int = 0, cache: str = "experiments/fl/fig2.json"
             results = json.load(f)
         print(f"(cached {cache})")
     else:
-        kw = dict(rounds=rounds, seed=seed, verbose=False)
+        kw = dict(rounds=rounds, seed=seed)
         if fast:
             kw.update(n_train=3000, n_test=600, steps_per_epoch=6)
         results = {}
         for scen in SCENARIOS:
             for merge in (True, False):
                 tag = f"{scen}__{'proposed' if merge else 'scaffold'}"
-                _, hist = run_experiment(scenario_name=scen, merge=merge, **kw)
+                spec = ExperimentSpec(scenario=scen, merge=merge, **kw)
+                _, hist = run_experiment(spec, verbose=False)
                 results[tag] = {
                     "acc": [r.accuracy for r in hist],
                     "active": [r.active_nodes_end for r in hist],
                     "bytes": [r.bytes_sent for r in hist],
                     "merged": [list(map(list, r.merged_groups)) for r in hist],
+                    "spec": json.loads(spec.to_json()),
                 }
                 print(f"  {tag}: final acc {hist[-1].accuracy:.4f}")
         if cache:

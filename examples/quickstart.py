@@ -1,53 +1,51 @@
-"""Quickstart: the paper's mechanism in ~60 lines of public API.
+"""Quickstart: the paper's mechanism through the declarative experiment API.
 
-Ten clients train a CNN on non-IID synthetic MNIST with SCAFFOLD; at round
-2 the Pearson-correlation merging algorithm folds similar clients into
+One frozen ExperimentSpec names the whole run — model, data, partition,
+algorithm, merge policy, scenario, schedule — and run_experiment executes
+it: ten clients train a CNN on non-IID synthetic MNIST with SCAFFOLD; at
+round 2 the Pearson-correlation merge policy folds similar clients into
 intermediary nodes; training continues with fewer active nodes.
+
+Swap one field to explore: merge_policy="cosine" | "random-pairs" | "none",
+scenario="packet_loss" | "poisoning" | "adverse", aggregator="median" | ...
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs import cnn_mnist
-from repro.core import AlgoConfig, FederatedSimulator, FLConfig
-from repro.data import make_synthetic_mnist, partition_noniid_classes
-from repro.models import cnn_accuracy, cnn_init, cnn_loss
+from repro.launch.experiment import ExperimentSpec, run_experiment
 
 
 def main():
-    ccfg = cnn_mnist.config()
-
-    # 1. data: synthetic MNIST, partitioned non-IID across 10 clients
-    x_tr, y_tr, x_te, y_te = make_synthetic_mnist(n_train=3000, n_test=600)
-    parts = partition_noniid_classes(y_tr, num_clients=10, seed=0)
-    shards = [(x_tr[p], y_tr[p]) for p in parts]
-    print("client shard sizes:", [len(p) for p in parts])
-
-    # 2. federated config: SCAFFOLD + the paper's merging at round 2
-    fl = FLConfig(
-        algo=AlgoConfig(algorithm="scaffold", lr_local=0.05),
-        num_rounds=5,
+    spec = ExperimentSpec(
+        model="cnn_mnist",
+        dataset="synthetic_mnist",
+        n_train=3000,
+        n_test=600,
+        partition="noniid_classes",
+        num_clients=10,
+        algo="scaffold",
+        lr_local=0.05,
+        merge_policy="pearson",     # the paper's similarity metric
+        merge_at=(2,),              # merge schedule: one pass at round 2
+        threshold=0.7,
+        max_group_size=3,
+        scenario="normal",
+        rounds=5,
         local_epochs=2,
         steps_per_epoch=6,
         batch_size=32,
-        merge_enabled=True,
-        merge_round=2,
-        threshold=0.7,
-        max_group_size=3,
     )
+    print("spec:", spec.describe())
+    print(f"merge policy: {spec.merge_policy!r} at rounds {list(spec.merge_at)}, "
+          f"scenario: {spec.scenario!r}")
 
-    # 3. simulate
-    sim = FederatedSimulator(
-        init_params_fn=lambda key: cnn_init(key, ccfg),
-        loss_fn=lambda params, batch: cnn_loss(params, ccfg, batch),
-        eval_fn=lambda params: cnn_accuracy(params, ccfg, x_te, y_te),
-        client_shards=shards,
-        fl=fl,
-    )
-    history = sim.run(verbose=True)
+    sim, history = run_experiment(spec)
 
     final = history[-1]
     print(f"\nfinal: accuracy={final.accuracy:.3f}, "
           f"active nodes {history[0].active_nodes} -> {final.active_nodes_end}, "
           f"bytes/round {history[0].bytes_sent:,} -> {final.bytes_sent:,}")
+    # the spec IS the experiment record: this JSON reproduces the run
+    print("\nspec JSON:\n" + spec.to_json())
 
 
 if __name__ == "__main__":

@@ -1,14 +1,17 @@
 """End-to-end driver (paper §V protocol): train the CNN for a few hundred
-local steps under each adverse condition, proposed vs. baseline SCAFFOLD.
+local steps under each adverse condition, proposed vs. baseline SCAFFOLD —
+plus the combined 'adverse' stress mix (packet loss + poisoning) with a
+robust aggregator, a configuration only expressible through the spec API.
 
-10 rounds x 2 epochs x 10 steps x 10 clients = 2,000 client steps per run;
-6 runs. This is the paper's Fig. 2 experiment end to end.
+10 rounds x 2 epochs x 10 steps x 10 clients = 2,000 client steps per run.
+This is the paper's Fig. 2 experiment end to end, each run one
+ExperimentSpec.
 
   PYTHONPATH=src python examples/robust_training.py [--fast]
 """
 import argparse
 
-from repro.launch.train import run_experiment
+from repro.launch.experiment import ExperimentSpec, run_experiment
 
 
 def main():
@@ -17,19 +20,22 @@ def main():
     args = ap.parse_args()
     # NOTE: keep local_epochs >= 2 — packet loss truncates to the FIRST
     # local epoch, so a single epoch would make the fault a no-op.
-    kw = dict(rounds=4, merge_round=2, local_epochs=2, steps_per_epoch=4,
+    kw = dict(rounds=4, merge_at=(2,), local_epochs=2, steps_per_epoch=4,
               n_train=2000, n_test=400) if args.fast \
         else dict(rounds=10, steps_per_epoch=10)
 
-    print(f"{'scenario':>12s} {'method':>9s} {'final acc':>9s} {'active':>6s}")
-    for scen in ("normal", "packet_loss", "poisoning"):
-        for merge in (True, False):
-            _, hist = run_experiment(
-                scenario_name=scen, merge=merge, verbose=False, **kw
-            )
-            name = "proposed" if merge else "scaffold"
-            print(f"{scen:>12s} {name:>9s} {hist[-1].accuracy:9.4f} "
-                  f"{hist[-1].active_nodes_end:6d}")
+    print(f"{'scenario':>12s} {'policy':>12s} {'agg':>7s} "
+          f"{'final acc':>9s} {'active':>6s}")
+    runs = [ExperimentSpec(scenario=s, merge=m, **kw)
+            for s in ("normal", "packet_loss", "poisoning")
+            for m in (True, False)]
+    # the stress mix: packet loss + label flipping, trimmed-mean server
+    runs.append(ExperimentSpec(scenario="adverse", aggregator="trimmed", **kw))
+    for spec in runs:
+        _, hist = run_experiment(spec, verbose=False)
+        policy = spec.merge_policy if spec.merge else "no-merge"
+        print(f"{spec.scenario:>12s} {policy:>12s} {spec.aggregator:>7s} "
+              f"{hist[-1].accuracy:9.4f} {hist[-1].active_nodes_end:6d}")
 
 
 if __name__ == "__main__":

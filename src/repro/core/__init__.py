@@ -8,6 +8,7 @@ from repro.core.merging import (
     MergePlan,
     merge_clients,
     build_merge_plan,
+    plan_from_groups,
     apply_merge,
     apply_merge_device,
     merged_data_sizes,
@@ -16,3 +17,5 @@ from repro.core.scaffold import AlgoConfig, make_round_fn, init_controls
 from repro.core.fedavg import make_fedavg_round, fedavg_config
 from repro.core.fedprox import make_fedprox_round, fedprox_config
 from repro.core.federation import FLConfig, Scenario, FederatedSimulator, RoundRecord
+from repro.core.merge_policy import MERGE_POLICIES, MergePolicy, make_merge_policy
+from repro.core.scenarios import SCENARIOS, build_scenario

@@ -3,7 +3,10 @@ merge-at-round-t intermediary-node mechanism.
 
 The simulator owns all *host-side* state (numpy client shards, merge
 bookkeeping, fault schedules) and calls one jitted round function per
-communication round. Merging never changes device-side shapes: retired
+communication round. WHO merges is delegated to the MergePolicy named by
+``FLConfig.merge_policy`` (core/merge_policy.MERGE_POLICIES); the
+scenario owns its data attacks and applies them to the shards here at
+construction (core/scenarios.SCENARIOS has the registered factories). Merging never changes device-side shapes: retired
 clients keep their slot with active=0, and their data is concatenated into
 the representative's shard (the intermediary node answers for the group —
 paper §IV.D "managing federated learning rounds in place of the original
@@ -31,14 +34,14 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as SH
+from repro.core.merge_policy import make_merge_policy
 from repro.core.merging import (
     apply_merge,
     apply_merge_device,
-    build_merge_plan,
     merged_data_sizes,
 )
-from repro.core.pearson import client_param_matrix, pearson_matrix, pearson_tree
 from repro.core.scaffold import AlgoConfig, init_controls, make_round_fn
+from repro.data.attacks import DataAttack
 from repro.data.faults import NetworkDelay, PacketLoss
 from repro.utils.pytree import tree_bytes
 
@@ -55,7 +58,14 @@ class FLConfig:
     # (1.0 = full participation, the paper's setting)
     participation: float = 1.0
     merge_enabled: bool = True
-    merge_round: int = 4
+    # which MergePolicy decides the grouping on merge rounds:
+    # "pearson" (the paper) | "cosine" | "random-pairs" | "none" — see
+    # core/merge_policy.MERGE_POLICIES
+    merge_policy: str = "pearson"
+    # the merge schedule: the set of rounds on which the policy runs.
+    # None means "derive from the deprecated merge_round/merge_rounds
+    # kwargs" (__post_init__ normalizes all three into one sorted tuple).
+    merge_at: Optional[Tuple[int, ...]] = None
     threshold: float = 0.7
     max_group_size: int = 3
     alpha: str = "uniform"
@@ -64,9 +74,13 @@ class FLConfig:
     # constant-initialized leaves that inflate cross-client correlation
     corr_sample: int = 0
     corr_exclude_constant: bool = False
-    # additional merge rounds (the paper's algorithm takes "number of merge
-    # operations"); re-merging runs among the still-active nodes
-    merge_rounds: Tuple[int, ...] = ()
+    # DEPRECATED aliases for merge_at, kept as accepted kwargs: the single
+    # first merge round plus the tuple of re-merge rounds. They are left
+    # exactly as passed (None when unset) — merge_at is the one field to
+    # read. Aliases that contradict an explicit merge_at raise — never a
+    # silently ignored schedule.
+    merge_round: Optional[int] = None
+    merge_rounds: Optional[Tuple[int, ...]] = None
     # route the streamed correlation chunks through the Pallas kernel
     # (interpret=True on CPU; the at-scale path)
     use_kernel_pearson: bool = False
@@ -83,6 +97,35 @@ class FLConfig:
     overlap_gather: bool = True
     seed: int = 0
 
+    def __post_init__(self):
+        # normalize the merge schedule into merge_at. The deprecated
+        # merge_round/merge_rounds kwargs still work on their own and are
+        # kept verbatim (so a __dict__/replace round-trip carries exactly
+        # what the caller set); when both forms are passed, the aliases
+        # must be contained in merge_at — a contradiction raises rather
+        # than silently picking one schedule.
+        if self.merge_at is None:
+            # historical semantics: merge at merge_round (default 4) plus
+            # any extra merge_rounds
+            first = 4 if self.merge_round is None else int(self.merge_round)
+            at = tuple(sorted(
+                {first} | {int(t) for t in (self.merge_rounds or ())}
+            ))
+        else:
+            at = tuple(sorted({int(t) for t in self.merge_at}))
+            # only what the caller actually passed constrains merge_at —
+            # no default merge_round is injected here
+            passed = set() if self.merge_round is None else {int(self.merge_round)}
+            passed |= {int(t) for t in (self.merge_rounds or ())}
+            if not passed <= set(at):
+                raise ValueError(
+                    f"conflicting merge schedule: merge_at={at} vs "
+                    f"deprecated merge_round/merge_rounds="
+                    f"{tuple(sorted(passed))}; set merge_at only (leave "
+                    f"the deprecated kwargs unset)"
+                )
+        object.__setattr__(self, "merge_at", at)
+
     @property
     def local_steps(self) -> int:
         return self.local_epochs * self.steps_per_epoch
@@ -90,14 +133,36 @@ class FLConfig:
 
 @dataclass
 class Scenario:
-    """Adverse conditions (paper §V). Data attacks are applied to shards at
-    construction; model attacks and faults act on updates per round."""
+    """Adverse conditions (paper §V), composable: a scenario owns its data
+    attacks (applied by the simulator to the client shards at construction,
+    via :meth:`apply_data_attacks`), its model attacks (per-round update
+    scaling), and its network faults (packet loss / delay schedules).
+    Registered factories live in core/scenarios.SCENARIOS."""
     name: str = "normal"
+    # data poisoning: specs applied to shards before any training
+    data_attacks: Tuple[DataAttack, ...] = ()
     model_poison: Dict[int, float] = field(default_factory=dict)
     packet_loss: Optional[PacketLoss] = None
     # stale updates: a delayed client's delta is excluded from its round's
     # aggregation and applied (weighted) when it "arrives" d rounds later
     network_delay: Optional[NetworkDelay] = None
+
+    def apply_data_attacks(self, shards, seed: int):
+        """Return shards with every data attack applied. The first attack
+        sees base seed ``seed`` (per-client streams ``seed + cid`` — the
+        historical launcher streams, bit-for-bit); each further attack
+        gets a large-stride offset so composed attacks draw independent
+        row masks instead of corrupting identical rows. Clients not named
+        by any attack pass through untouched, sharing storage with the
+        input."""
+        if not self.data_attacks:
+            return list(shards)
+        out = []
+        for cid, (x, y) in enumerate(shards):
+            for i, atk in enumerate(self.data_attacks):
+                x, y = atk.apply(cid, x, y, seed + 1_000_003 * i)
+            out.append((x, y))
+        return out
 
 
 @dataclass
@@ -139,10 +204,14 @@ class FederatedSimulator:
         self.mesh = mesh
         self.scenario = scenario or Scenario()
         self.eval_fn = eval_fn
+        # the scenario owns its data attacks: poisoned shards are built
+        # here, before any weights/buffers are derived from them
         self.shards: List[Tuple[np.ndarray, np.ndarray]] = [
-            (np.asarray(x), np.asarray(y)) for x, y in client_shards
+            (np.asarray(x), np.asarray(y))
+            for x, y in self.scenario.apply_data_attacks(client_shards, fl.seed)
         ]
         self.K = len(self.shards)
+        self.policy = make_merge_policy(fl)
         self.rng = np.random.default_rng(fl.seed)
 
         key = jax.random.PRNGKey(fl.seed)
@@ -338,46 +407,19 @@ class FederatedSimulator:
             )
 
     # ------------------------------------------------------------------
-    def _correlate(self, x_locals) -> np.ndarray:
-        """K x K Pearson matrix over the round's local models.
-
-        Device pipeline: streaming tree-Pearson — per-leaf (gram, sums)
-        accumulation (optionally through the Pallas kernel) with fused
-        column subsampling; only the K x K result crosses to host. Host
-        pipeline: the original materialized (K, M) oracle."""
-        if self.fl.pipeline == "device":
-            return np.asarray(
-                pearson_tree(
-                    x_locals,
-                    exclude_constant=self.fl.corr_exclude_constant,
-                    sample=self.fl.corr_sample,
-                    seed=self.fl.seed,
-                    use_kernel=self.fl.use_kernel_pearson,
-                )
-            )
-        from repro.core.pearson import subsample_columns
-
-        X = client_param_matrix(
-            x_locals, exclude_constant=self.fl.corr_exclude_constant
-        )
-        X = subsample_columns(X, self.fl.corr_sample, seed=self.fl.seed)
-        if self.fl.use_kernel_pearson:
-            from repro.core.pearson import pearson_matrix_fast
-            return np.asarray(pearson_matrix_fast(jnp.asarray(X)))
-        return np.asarray(pearson_matrix(jnp.asarray(X)))
-
     def _merge(self, x_locals) -> Tuple[Tuple[int, ...], ...]:
-        """Run the paper's merging algorithm on the round's local models."""
-        corr = self._correlate(x_locals)
-        plan = build_merge_plan(
-            corr,
-            data_sizes=self.weights.astype(np.int64),
-            threshold=self.fl.threshold,
-            max_group_size=self.fl.max_group_size,
-            active=self.active.astype(bool),
-            alpha=self.fl.alpha,
-        )
+        """Run the configured MergePolicy on the round's local models and
+        apply its plan: mix control state, move merged members' data rows
+        to the representative, update weights and the active mask. The
+        policy decides WHO merges; everything here is bookkeeping."""
+        sim_matrix = self.policy.similarity(x_locals)
+        plan = self.policy.plan(sim_matrix, self.weights, self.active)
         self.merge_plan = plan
+        if not plan.groups:
+            # identity plan (e.g. policy "none", or nothing above
+            # threshold): no state changes, no buffer rebuild
+            self.active = plan.active.astype(np.float32)
+            return ()
         # merge control variates (paper line 46: c_merged)
         if self.fl.pipeline == "device":
             # jitted W @ leaf contraction; c_locals donated (mixed in place)
@@ -443,9 +485,7 @@ class FederatedSimulator:
                 jnp.asarray(round_mask),
                 jnp.asarray(poison),
             )
-            will_merge = fl.merge_enabled and (
-                t == fl.merge_round or t in fl.merge_rounds
-            )
+            will_merge = fl.merge_enabled and t in fl.merge_at
             overlap = fl.pipeline == "device" and fl.overlap_gather
             if overlap and not will_merge and t + 1 < fl.num_rounds:
                 # double buffer: round t+1's gather is enqueued now, while

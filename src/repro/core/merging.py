@@ -66,23 +66,20 @@ def merge_clients(
     return groups, unmerged
 
 
-def build_merge_plan(
-    correlation: np.ndarray,
+def plan_from_groups(
+    K: int,
+    groups: Sequence[Sequence[int]],
+    unmerged: Sequence[int],
     data_sizes: Sequence[int],
-    threshold: float = 0.7,
-    max_group_size: int = 3,
-    active: Optional[np.ndarray] = None,
     alpha: str = "uniform",                  # "uniform" | "data" — merge weights
 ) -> MergePlan:
-    """Greedy grouping -> fixed-shape merge matrix.
+    """Turn an explicit grouping into the fixed-shape merge matrix.
 
     x_merged = sum_g alpha_g x_g  (paper Eq. line 45, generalised to groups;
-    alpha='uniform' gives the paper's alpha=0.5 for pairs)."""
-    K = correlation.shape[0]
-    if active is None:
-        active = np.ones(K, bool)
-    groups, unmerged = merge_clients(correlation, threshold, max_group_size, active)
-
+    alpha='uniform' gives the paper's alpha=0.5 for pairs). This is the
+    shared back half of every merge policy: correlation-driven policies
+    derive (groups, unmerged) from a similarity matrix, but e.g. the
+    random-pairs baseline builds the grouping directly."""
     W = np.zeros((K, K), np.float32)
     new_active = np.zeros(K, bool)
     reps = []
@@ -107,6 +104,22 @@ def build_merge_plan(
         active=new_active,
         representatives=tuple(reps),
     )
+
+
+def build_merge_plan(
+    correlation: np.ndarray,
+    data_sizes: Sequence[int],
+    threshold: float = 0.7,
+    max_group_size: int = 3,
+    active: Optional[np.ndarray] = None,
+    alpha: str = "uniform",
+) -> MergePlan:
+    """Greedy similarity grouping -> fixed-shape merge matrix."""
+    K = correlation.shape[0]
+    if active is None:
+        active = np.ones(K, bool)
+    groups, unmerged = merge_clients(correlation, threshold, max_group_size, active)
+    return plan_from_groups(K, groups, unmerged, data_sizes, alpha)
 
 
 def apply_merge(plan: MergePlan, stacked_tree):

@@ -1,0 +1,119 @@
+"""Scenario registry (registry-backed extension point #2).
+
+Each entry is a factory ``(num_clients, seed, **knobs) -> Scenario`` that
+builds a fully self-contained adverse-condition mix: the Scenario owns its
+data attacks (applied to shards at simulator construction), model-poison
+factors, and network-fault schedules. The registry replaces the old
+``launch/train.py:build_scenario`` if-chain — and unlike it, the poisoning
+scenarios no longer leak their label flipping into the launcher: the
+factory's DataAttack reproduces the historical shards bit-for-bit (same
+``seed + cid`` streams).
+
+  normal        — clean run
+  packet_loss   — paper §V: hit clients' training truncated to epoch 1
+  drop          — stronger classical reading: hit clients' update is lost
+  network_delay — stale updates arrive d rounds late
+  poisoning     — label-flipped clients (default: 3 of 10, paper §V)
+  adverse       — packet loss + poisoning combined (stress mix)
+
+Register your own with ``@SCENARIOS.register("name")``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from repro.core.federation import Scenario
+from repro.data.attacks import DataAttack
+from repro.data.faults import NetworkDelay, PacketLoss
+from repro.utils.registry import Registry
+
+SCENARIOS: Registry[Scenario] = Registry("scenario")
+
+
+def build_scenario(name: str, num_clients: int, seed: int = 0, **kw) -> Scenario:
+    """Look up + build: the one entry point launchers/benchmarks use."""
+    return SCENARIOS.get(name)(num_clients, seed, **kw)
+
+
+def _poison_ids(num_clients: int, poison_frac: float,
+                client_ids: Optional[Sequence[int]]) -> Tuple[int, ...]:
+    if client_ids is not None:
+        return tuple(int(c) for c in client_ids)
+    # paper §V: 3 of 10 clients; floor(frac * K), at least one
+    return tuple(range(max(1, int(num_clients * poison_frac))))
+
+
+@SCENARIOS.register("normal")
+def normal(num_clients: int, seed: int = 0) -> Scenario:
+    return Scenario(name="normal")
+
+
+@SCENARIOS.register("packet_loss")
+def packet_loss(num_clients: int, seed: int = 0, prob: float = 0.6,
+                affected_frac: float = 0.5) -> Scenario:
+    return Scenario(
+        name="packet_loss",
+        packet_loss=PacketLoss(prob=prob, affected_frac=affected_frac,
+                               seed=seed),
+    )
+
+
+@SCENARIOS.register("drop")
+def drop(num_clients: int, seed: int = 0, prob: float = 0.6,
+         affected_frac: float = 0.5) -> Scenario:
+    return Scenario(
+        name="drop",
+        packet_loss=PacketLoss(prob=prob, drop_update=True,
+                               affected_frac=affected_frac, seed=seed),
+    )
+
+
+@SCENARIOS.register("network_delay")
+def network_delay(num_clients: int, seed: int = 0, max_delay: int = 2,
+                  affected_frac: float = 0.5) -> Scenario:
+    return Scenario(
+        name="network_delay",
+        network_delay=NetworkDelay(max_delay=max_delay,
+                                   affected_frac=affected_frac, seed=seed),
+    )
+
+
+@SCENARIOS.register("poisoning")
+def poisoning(num_clients: int, seed: int = 0, poison_frac: float = 0.3,
+              flip_frac: float = 1.0, num_classes: int = 10,
+              client_ids: Optional[Sequence[int]] = None,
+              sign_flip_ids: Sequence[int] = (),
+              sign_flip_scale: float = 1.0) -> Scenario:
+    """Data poisoning (label flips on ``client_ids``) and/or model
+    poisoning (``sign_flip_ids`` send their delta negated and scaled by
+    ``sign_flip_scale`` — the §IV.C sign-flip attack)."""
+    ids = _poison_ids(num_clients, poison_frac, client_ids)
+    attacks = (
+        (DataAttack(kind="label_flip", client_ids=ids,
+                    num_classes=num_classes, flip_frac=flip_frac),)
+        if ids else ()
+    )
+    return Scenario(
+        name="poisoning",
+        data_attacks=attacks,
+        model_poison={int(c): -float(sign_flip_scale) for c in sign_flip_ids},
+    )
+
+
+@SCENARIOS.register("adverse")
+def adverse(num_clients: int, seed: int = 0, prob: float = 0.6,
+            affected_frac: float = 0.5, poison_frac: float = 0.3,
+            flip_frac: float = 1.0, num_classes: int = 10,
+            client_ids: Optional[Sequence[int]] = None) -> Scenario:
+    """Combined stress mix: packet loss AND label-flip poisoning, the
+    configuration the hard-coded launcher could not express."""
+    ids = _poison_ids(num_clients, poison_frac, client_ids)
+    return Scenario(
+        name="adverse",
+        data_attacks=(
+            DataAttack(kind="label_flip", client_ids=ids,
+                       num_classes=num_classes, flip_frac=flip_frac),
+        ),
+        packet_loss=PacketLoss(prob=prob, affected_frac=affected_frac,
+                               seed=seed),
+    )

@@ -1,4 +1,14 @@
 from repro.data.synthetic_mnist import make_synthetic_mnist
-from repro.data.partition import partition_noniid_classes, partition_dirichlet
-from repro.data.attacks import label_flip, feature_noise, inject_fake_data
+from repro.data.partition import (
+    partition_noniid_classes,
+    partition_dirichlet,
+    partition_class_pairs,
+)
+from repro.data.attacks import (
+    DataAttack,
+    label_flip,
+    feature_noise,
+    inject_fake_data,
+)
 from repro.data.faults import PacketLoss, NetworkDelay
+from repro.data.toy import make_blobs, sample_blobs

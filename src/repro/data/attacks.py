@@ -11,6 +11,7 @@ Model poisoning operates on the client's update AFTER training:
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import numpy as np
@@ -59,6 +60,47 @@ def inject_fake_data(
     xf = rng.random((n_fake,) + x.shape[1:]).astype(x.dtype)
     yf = rng.integers(0, num_classes, n_fake).astype(y.dtype)
     return np.concatenate([x, xf]), np.concatenate([y, yf])
+
+
+# ---- declarative data-attack spec -----------------------------------------
+
+@dataclass(frozen=True)
+class DataAttack:
+    """A data-poisoning spec a Scenario owns and applies to its clients'
+    shards at simulator construction (before any training).
+
+    Per-client randomness is derived as ``base_seed + cid`` so a given
+    (scenario, seed) pair corrupts the same rows every run — and so the
+    registry-built poisoning scenario reproduces the historical
+    ``launch/train.py`` shards bit-for-bit.
+    """
+    kind: str = "label_flip"            # "label_flip" | "feature_noise"
+    client_ids: Tuple[int, ...] = ()
+    # label_flip knobs
+    num_classes: int = 10
+    flip_frac: float = 1.0
+    source: Optional[int] = None
+    target: Optional[int] = None
+    # feature_noise knobs
+    sigma: float = 1.0
+    frac: float = 1.0
+
+    def apply(self, cid: int, x: np.ndarray, y: np.ndarray, base_seed: int):
+        if cid not in self.client_ids:
+            return x, y
+        if self.kind == "label_flip":
+            return x, label_flip(
+                y, num_classes=self.num_classes, source=self.source,
+                target=self.target, flip_frac=self.flip_frac,
+                seed=base_seed + cid,
+            )
+        if self.kind == "feature_noise":
+            return (
+                feature_noise(x, sigma=self.sigma, frac=self.frac,
+                              seed=base_seed + cid),
+                y,
+            )
+        raise ValueError(f"unknown data attack kind '{self.kind}'")
 
 
 # ---- model poisoning (applied to updates, jit-safe) -----------------------

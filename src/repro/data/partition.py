@@ -66,6 +66,24 @@ def partition_noniid_classes(
     return out
 
 
+def partition_class_pairs(
+    labels: np.ndarray,
+    num_clients: int,
+    seed: int = 0,
+    n_per: int = 150,
+) -> List[np.ndarray]:
+    """Deterministic extreme-non-IID partition for the toy task: client i
+    holds the first ``n_per`` samples of classes {i mod C, (i+1) mod C}.
+    Adjacent clients overlap in exactly one class, so the similarity-based
+    merge has real structure to find."""
+    num_classes = int(labels.max()) + 1
+    parts: List[np.ndarray] = []
+    for i in range(num_clients):
+        classes = [(i % num_classes), ((i + 1) % num_classes)]
+        parts.append(np.flatnonzero(np.isin(labels, classes))[:n_per])
+    return parts
+
+
 def partition_dirichlet(
     labels: np.ndarray, num_clients: int, alpha: float = 0.3, seed: int = 0
 ) -> List[np.ndarray]:

@@ -1,0 +1,283 @@
+"""Declarative experiment API (registry-backed extension point #3).
+
+One frozen :class:`ExperimentSpec` names everything an FL experiment is —
+model, dataset, partition, algorithm, merge policy, scenario, mesh,
+schedule — each axis resolved through a registry, and one
+:func:`run_experiment` turns a spec into a finished
+``(FederatedSimulator, history)``. Launchers, benchmarks, examples, and
+tests all build specs instead of hand-assembling the
+model+data+config+simulator stack; a new scenario/metric/model plugs in by
+registering a factory, not by editing the simulator.
+
+Registries (see also core/merge_policy.MERGE_POLICIES and
+core/scenarios.SCENARIOS):
+
+  FL_MODELS    name -> (spec, x_te, y_te) -> (init_fn, loss_fn, eval_fn)
+  FL_DATASETS  name -> (spec) -> (x_tr, y_tr, x_te, y_te)
+  PARTITIONS   name -> (labels, num_clients, seed, **kw) -> index arrays
+  MESHES       name -> () -> jax Mesh  (the spec stores the NAME, so specs
+               stay JSON-serializable and device-independent)
+
+Specs round-trip through JSON (``to_json`` / ``from_json``) so a run is
+reproducible from the sidecar file the CLI writes next to its history.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field, fields
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.federation import FederatedSimulator, FLConfig
+from repro.core.scaffold import AlgoConfig
+from repro.core.merge_policy import MERGE_POLICIES
+from repro.core.scenarios import SCENARIOS, build_scenario
+from repro.utils.registry import Registry
+
+FL_MODELS: Registry[tuple] = Registry("fl model")
+FL_DATASETS: Registry[tuple] = Registry("fl dataset")
+PARTITIONS: Registry[list] = Registry("partition scheme")
+MESHES: Registry[object] = Registry("mesh")
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything one FL experiment is, by name + scalar knobs."""
+
+    # model / data / partition
+    # the dict-valued knob fields are excluded from the generated __hash__
+    # (dicts are unhashable); specs hash on every scalar/tuple field, so
+    # using them as cache keys / set members works
+    model: str = "cnn_mnist"
+    dataset: str = "synthetic_mnist"
+    n_train: int = 6000
+    n_test: int = 1000
+    data_kwargs: Dict[str, Any] = field(default_factory=dict, hash=False)
+    partition: str = "noniid_classes"
+    partition_kwargs: Dict[str, Any] = field(default_factory=dict, hash=False)
+    num_clients: int = 10
+    # algorithm
+    algo: str = "scaffold"
+    lr_local: float = 0.05
+    lr_global: float = 1.0
+    prox_mu: float = 0.0
+    aggregator: str = "mean"          # mean | median | trimmed | krum
+    trim: int = 1
+    # merge policy
+    merge: bool = True
+    merge_policy: str = "pearson"
+    merge_at: Tuple[int, ...] = (4,)
+    threshold: float = 0.7
+    max_group_size: int = 3
+    alpha: str = "uniform"
+    corr_sample: int = 0
+    # scenario
+    scenario: str = "normal"
+    scenario_kwargs: Dict[str, Any] = field(default_factory=dict, hash=False)
+    # schedule / runtime
+    rounds: int = 10
+    local_epochs: int = 2
+    steps_per_epoch: int = 10
+    batch_size: int = 32
+    participation: float = 1.0
+    pipeline: str = "device"
+    mesh: Optional[str] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "merge_at",
+                           tuple(int(t) for t in self.merge_at))
+
+    # ---- serialization ---------------------------------------------------
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(asdict(self), indent=indent, sort_keys=False)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        d = json.loads(s)
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown ExperimentSpec fields: {sorted(unknown)} "
+                f"(known: {sorted(known)})"
+            )
+        return cls(**d)
+
+    # ---- resolution ------------------------------------------------------
+    def fl_config(self) -> FLConfig:
+        return FLConfig(
+            algo=AlgoConfig(
+                algorithm=self.algo,
+                lr_local=self.lr_local,
+                lr_global=self.lr_global,
+                prox_mu=self.prox_mu,
+                aggregator=self.aggregator,
+                trim=self.trim,
+            ),
+            num_rounds=self.rounds,
+            local_epochs=self.local_epochs,
+            steps_per_epoch=self.steps_per_epoch,
+            batch_size=self.batch_size,
+            participation=self.participation,
+            merge_enabled=self.merge,
+            merge_policy=self.merge_policy,
+            merge_at=self.merge_at,
+            threshold=self.threshold,
+            max_group_size=self.max_group_size,
+            alpha=self.alpha,
+            corr_sample=self.corr_sample,
+            pipeline=self.pipeline,
+            seed=self.seed,
+        )
+
+    def describe(self) -> str:
+        """One-line human summary (examples print this as living docs)."""
+        merge = (
+            f"merge={self.merge_policy}@{list(self.merge_at)}"
+            f" thr={self.threshold}"
+            if self.merge else "merge=off"
+        )
+        return (
+            f"{self.model}/{self.dataset} K={self.num_clients} "
+            f"algo={self.algo} agg={self.aggregator} {merge} "
+            f"scenario={self.scenario} rounds={self.rounds} seed={self.seed}"
+        )
+
+
+ALGORITHMS = ("scaffold", "fedavg", "fedprox")
+AGGREGATORS = ("mean", "median", "trimmed", "krum")
+ALPHAS = ("uniform", "data")
+
+
+def validate_spec(spec: ExperimentSpec) -> None:
+    """Fail fast — registry 'available: [...]' KeyError on any unknown
+    name, ValueError on any unknown enum knob — before data is
+    generated or anything is traced."""
+    FL_MODELS.get(spec.model)
+    FL_DATASETS.get(spec.dataset)
+    PARTITIONS.get(spec.partition)
+    SCENARIOS.get(spec.scenario)
+    MERGE_POLICIES.get(spec.merge_policy)
+    if spec.mesh not in (None, "none"):
+        MESHES.get(spec.mesh)
+    for field_name, value, allowed in (
+        ("algo", spec.algo, ALGORITHMS),
+        ("aggregator", spec.aggregator, AGGREGATORS),
+        ("alpha", spec.alpha, ALPHAS),
+        ("pipeline", spec.pipeline, ("device", "host")),
+    ):
+        if value not in allowed:
+            raise ValueError(
+                f"unknown ExperimentSpec.{field_name} {value!r}. "
+                f"available: {list(allowed)}"
+            )
+
+
+def resolve_mesh(name: Optional[str]):
+    if name is None or name == "none":
+        return None
+    return MESHES.get(name)()
+
+
+def build_simulator(spec: ExperimentSpec) -> FederatedSimulator:
+    """Spec -> simulator: resolve each registry, build shards, hand the
+    scenario (which owns its data attacks) to the simulator."""
+    validate_spec(spec)
+    x_tr, y_tr, x_te, y_te = FL_DATASETS.get(spec.dataset)(spec)
+    parts = PARTITIONS.get(spec.partition)(
+        y_tr, spec.num_clients, seed=spec.seed, **spec.partition_kwargs
+    )
+    shards = [(x_tr[p], y_tr[p]) for p in parts]
+    scenario = build_scenario(
+        spec.scenario, spec.num_clients, spec.seed, **spec.scenario_kwargs
+    )
+    init_fn, loss_fn, eval_fn = FL_MODELS.get(spec.model)(spec, x_te, y_te)
+    return FederatedSimulator(
+        init_params_fn=init_fn,
+        loss_fn=loss_fn,
+        eval_fn=eval_fn,
+        client_shards=shards,
+        fl=spec.fl_config(),
+        scenario=scenario,
+        mesh=resolve_mesh(spec.mesh),
+    )
+
+
+def run_experiment(spec: ExperimentSpec, verbose: bool = True):
+    """The single entry point: spec in, (simulator, history) out."""
+    sim = build_simulator(spec)
+    hist = sim.run(verbose=verbose)
+    return sim, hist
+
+
+# ---------------------------------------------------------------------------
+# built-in registry entries
+# ---------------------------------------------------------------------------
+
+@FL_DATASETS.register("synthetic_mnist")
+def _dataset_synthetic_mnist(spec: ExperimentSpec):
+    from repro.data.synthetic_mnist import make_synthetic_mnist
+    return make_synthetic_mnist(spec.n_train, spec.n_test, seed=spec.seed,
+                                **spec.data_kwargs)
+
+
+@FL_DATASETS.register("blobs")
+def _dataset_blobs(spec: ExperimentSpec):
+    from repro.data.toy import make_blobs
+    return make_blobs(spec.n_train, spec.n_test, seed=spec.seed,
+                      **spec.data_kwargs)
+
+
+@PARTITIONS.register("noniid_classes")
+def _partition_noniid(labels, num_clients, seed=0, **kw):
+    from repro.data.partition import partition_noniid_classes
+    return partition_noniid_classes(labels, num_clients, seed=seed, **kw)
+
+
+@PARTITIONS.register("dirichlet")
+def _partition_dirichlet(labels, num_clients, seed=0, **kw):
+    from repro.data.partition import partition_dirichlet
+    return partition_dirichlet(labels, num_clients, seed=seed, **kw)
+
+
+@PARTITIONS.register("class_pairs")
+def _partition_class_pairs(labels, num_clients, seed=0, **kw):
+    from repro.data.partition import partition_class_pairs
+    return partition_class_pairs(labels, num_clients, seed=seed, **kw)
+
+
+@FL_MODELS.register("cnn_mnist")
+def _model_cnn_mnist(spec: ExperimentSpec, x_te, y_te):
+    from repro.configs import cnn_mnist
+    from repro.models import cnn_accuracy, cnn_init, cnn_loss
+    ccfg = cnn_mnist.config()
+    return (
+        lambda key: cnn_init(key, ccfg),
+        lambda params, batch: cnn_loss(params, ccfg, batch),
+        lambda params: cnn_accuracy(params, ccfg, x_te, y_te),
+    )
+
+
+@FL_MODELS.register("linear")
+def _model_linear(spec: ExperimentSpec, x_te, y_te):
+    from repro.models.linear import linear_accuracy, linear_init, linear_loss
+    dim = int(x_te.shape[-1])
+    num_classes = int(spec.data_kwargs.get("num_classes", int(y_te.max()) + 1))
+    return (
+        lambda key: linear_init(key, dim, num_classes),
+        linear_loss,
+        lambda params: linear_accuracy(params, x_te, y_te),
+    )
+
+
+@MESHES.register("fl")
+def _mesh_fl():
+    from repro.launch.mesh import make_fl_mesh
+    return make_fl_mesh(1)
+
+
+@MESHES.register("fl_smoke")
+def _mesh_fl_smoke():
+    from repro.launch.mesh import make_fl_smoke_mesh
+    return make_fl_smoke_mesh()

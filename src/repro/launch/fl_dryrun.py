@@ -22,6 +22,8 @@ merging algorithm elides.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--arch qwen3-1.7b]
   PYTHONPATH=src python -m repro.launch.fl_dryrun --smoke   # CPU CI mesh
+  PYTHONPATH=src python -m repro.launch.fl_dryrun --spec run.spec.json
+      # baseline K / mesh taken from an ExperimentSpec sidecar
 """
 import argparse
 import json
@@ -159,12 +161,35 @@ def main():
                     help="reduced config on the small (pod=2, data=2, "
                          "model=1) CPU mesh — the CI smoke; set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=4 (or more)")
+    ap.add_argument("--spec", default=None,
+                    help="ExperimentSpec JSON: baseline K = spec.num_clients "
+                         "(post-merge K = half), mesh = spec.mesh")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
+    k_base = 8
     mesh = make_fl_smoke_mesh() if args.smoke else None
+    if args.spec:
+        from repro.launch.experiment import ExperimentSpec, resolve_mesh
+        with open(args.spec) as f:
+            spec = ExperimentSpec.from_json(f.read())
+        k_base = spec.num_clients
+        if spec.mesh not in (None, "none"):
+            mesh = resolve_mesh(spec.mesh)
+    if mesh is None:
+        # build the default mesh once; the lowerings below reuse it
+        mesh = make_production_mesh(multi_pod=True)
     tag_suffix = "__smoke" if args.smoke else ""
+    pod = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+
+    def pod_multiple(k: int) -> int:
+        """The stacked client axis shards over 'pod': round k down to a
+        whole number of pods (at least one pod-full) so the lowering is
+        valid for any spec.num_clients."""
+        return max(pod, (k // pod) * pod)
+
     recs = []
-    for K, tag in ((8, "baseline"), (4, "post_merge")):
+    for K, tag in ((pod_multiple(k_base), "baseline"),
+                   (pod_multiple(max(k_base // 2, 1)), "post_merge")):
         r1 = lower_fl_round(args.arch, K, seq=64 if args.smoke else 512,
                             batch_per_client=4 if args.smoke else 16,
                             mesh=mesh, reduced=args.smoke)

@@ -1,11 +1,18 @@
-"""FL training driver — runs the paper's experiment end to end.
+"""FL training driver — the spec CLI over the declarative experiment API.
+
+Every run is an :class:`repro.launch.experiment.ExperimentSpec`; the CLI
+only builds (or loads) a spec and hands it to ``run_experiment``. Choices
+are registry-driven, so a newly registered scenario/policy/model shows up
+here without touching this file.
 
   PYTHONPATH=src python -m repro.launch.train --scenario normal --rounds 10
-  PYTHONPATH=src python -m repro.launch.train --scenario poisoning --no-merge
-  PYTHONPATH=src python -m repro.launch.train --scenario packet_loss --algo fedavg
+  PYTHONPATH=src python -m repro.launch.train --scenario adverse --aggregator trimmed
+  PYTHONPATH=src python -m repro.launch.train --merge-policy cosine --merge-at 2 5
+  PYTHONPATH=src python -m repro.launch.train --spec experiments/fl/run.spec.json
+  PYTHONPATH=src python -m repro.launch.train --dump-spec   # print + exit
 
-Scenarios (paper §V): normal | packet_loss | poisoning.
-Writes per-round history JSON + a final global-model checkpoint.
+Writes per-round history JSON + a final global-model checkpoint + the
+spec sidecar (``<tag>.spec.json``) that reproduces the run.
 """
 from __future__ import annotations
 
@@ -13,138 +20,102 @@ import argparse
 import json
 import os
 
-import numpy as np
-
 from repro.checkpoint import save_pytree
-from repro.configs import cnn_mnist
-from repro.core import AlgoConfig, FederatedSimulator, FLConfig, Scenario
-from repro.data import (
-    PacketLoss,
-    label_flip,
-    make_synthetic_mnist,
-    partition_noniid_classes,
+from repro.core.merge_policy import MERGE_POLICIES
+from repro.core.scenarios import SCENARIOS
+from repro.launch.experiment import (
+    AGGREGATORS,
+    ALGORITHMS,
+    ExperimentSpec,
+    FL_DATASETS,
+    FL_MODELS,
+    MESHES,
+    run_experiment,
 )
-from repro.models import cnn_accuracy, cnn_init, cnn_loss
 
 
-def build_scenario(name: str, num_clients: int, seed: int = 0):
-    """Paper §V conditions. Poisoning: 3 of 10 clients label-flipped.
-    Packet loss: training truncated after the first epoch for hit clients."""
-    if name == "normal":
-        return Scenario(name="normal"), ()
-    if name == "packet_loss":
-        return (
-            Scenario(name="packet_loss",
-                     packet_loss=PacketLoss(prob=0.6, affected_frac=0.5, seed=seed)),
-            (),
-        )
-    if name == "poisoning":
-        poisoned = tuple(range(max(1, num_clients * 3 // 10)))
-        return Scenario(name="poisoning"), poisoned
-    if name == "network_delay":
-        from repro.data.faults import NetworkDelay
-        return (
-            Scenario(name="network_delay",
-                     network_delay=NetworkDelay(max_delay=2, affected_frac=0.5,
-                                                seed=seed)),
-            (),
-        )
-    raise ValueError(name)
-
-
-def run_experiment(
-    scenario_name: str = "normal",
-    algo: str = "scaffold",
-    merge: bool = True,
-    rounds: int = 10,
-    merge_round: int = 4,
-    threshold: float = 0.7,
-    max_group_size: int = 3,
-    num_clients: int = 10,
-    n_train: int = 6000,
-    n_test: int = 1000,
-    steps_per_epoch: int = 10,
-    local_epochs: int = 2,
-    lr_local: float = 0.05,
-    corr_sample: int = 0,
-    pipeline: str = "device",
-    seed: int = 0,
-    verbose: bool = True,
-):
-    ccfg = cnn_mnist.config()
-    x_tr, y_tr, x_te, y_te = make_synthetic_mnist(n_train, n_test, seed=seed)
-    parts = partition_noniid_classes(y_tr, num_clients, seed=seed)
-    scenario, poisoned = build_scenario(scenario_name, num_clients, seed)
-
-    shards = []
-    for cid, p in enumerate(parts):
-        x, y = x_tr[p], y_tr[p]
-        if cid in poisoned:  # data poisoning: full label flip (paper §IV.C)
-            y = label_flip(y, num_classes=10, flip_frac=1.0, seed=seed + cid)
-        shards.append((x, y))
-
-    fl = FLConfig(
-        algo=AlgoConfig(algorithm=algo, lr_local=lr_local),
-        num_rounds=rounds,
-        local_epochs=local_epochs,
-        steps_per_epoch=steps_per_epoch,
-        merge_enabled=merge,
-        merge_round=merge_round,
-        threshold=threshold,
-        max_group_size=max_group_size,
-        corr_sample=corr_sample,
-        pipeline=pipeline,
-        seed=seed,
+def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    if args.spec:
+        with open(args.spec) as f:
+            return ExperimentSpec.from_json(f.read())
+    return ExperimentSpec(
+        model=args.model,
+        dataset=args.dataset,
+        n_train=args.n_train,
+        n_test=args.n_test,
+        num_clients=args.clients,
+        algo=args.algo,
+        aggregator=args.aggregator,
+        merge=not args.no_merge,
+        merge_policy=args.merge_policy,
+        merge_at=tuple(args.merge_at),
+        threshold=args.threshold,
+        corr_sample=args.corr_sample,
+        scenario=args.scenario,
+        rounds=args.rounds,
+        local_epochs=args.local_epochs,
+        steps_per_epoch=args.steps_per_epoch,
+        pipeline=args.pipeline,
+        mesh=None if args.mesh == "none" else args.mesh,
+        seed=args.seed,
     )
-    sim = FederatedSimulator(
-        init_params_fn=lambda k: cnn_init(k, ccfg),
-        loss_fn=lambda p, b: cnn_loss(p, ccfg, b),
-        eval_fn=lambda p: cnn_accuracy(p, ccfg, x_te, y_te),
-        client_shards=shards,
-        fl=fl,
-        scenario=scenario,
-    )
-    hist = sim.run(verbose=verbose)
-    return sim, hist
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", default="normal",
-                    choices=["normal", "packet_loss", "poisoning",
-                             "network_delay"])
-    ap.add_argument("--algo", default="scaffold",
-                    choices=["scaffold", "fedavg", "fedprox"])
+    ap = argparse.ArgumentParser(
+        description="Run one FL experiment from a declarative spec."
+    )
+    ap.add_argument("--spec", default=None,
+                    help="load an ExperimentSpec JSON (overrides all other "
+                         "spec flags)")
+    ap.add_argument("--model", default="cnn_mnist", choices=FL_MODELS.names())
+    ap.add_argument("--dataset", default="synthetic_mnist",
+                    choices=FL_DATASETS.names())
+    ap.add_argument("--scenario", default="normal", choices=SCENARIOS.names())
+    ap.add_argument("--algo", default="scaffold", choices=ALGORITHMS)
+    ap.add_argument("--aggregator", default="mean", choices=AGGREGATORS)
+    ap.add_argument("--merge-policy", default="pearson",
+                    choices=MERGE_POLICIES.names())
     ap.add_argument("--no-merge", action="store_true")
     ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--merge-round", type=int, default=4)
+    ap.add_argument("--merge-at", type=int, nargs="+", default=[4],
+                    help="rounds on which the merge policy runs")
     ap.add_argument("--threshold", type=float, default=0.7)
     ap.add_argument("--corr-sample", type=int, default=0,
                     help="correlate over a random coordinate subsample "
                          "(0 = all params), fused into the streaming path")
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--n-train", type=int, default=6000)
+    ap.add_argument("--n-test", type=int, default=1000)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--pipeline", default="device",
                     choices=["device", "host"],
                     help="merge pipeline: zero-copy streaming (device) or "
                          "the numpy oracle (host)")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none"] + MESHES.names(),
+                    help="named mesh for the pod-sharded mode (default: none)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/fl")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved spec JSON and exit")
     args = ap.parse_args()
 
-    sim, hist = run_experiment(
-        scenario_name=args.scenario,
-        algo=args.algo,
-        merge=not args.no_merge,
-        rounds=args.rounds,
-        merge_round=args.merge_round,
-        threshold=args.threshold,
-        corr_sample=args.corr_sample,
-        pipeline=args.pipeline,
-        seed=args.seed,
-    )
+    spec = spec_from_args(args)
+    if args.dump_spec:
+        print(spec.to_json())
+        return
+    print(spec.describe())
+
+    sim, hist = run_experiment(spec)
     os.makedirs(args.out, exist_ok=True)
-    tag = f"{args.scenario}__{args.algo}__{'merge' if not args.no_merge else 'nomerge'}"
+    tag = (f"{spec.scenario}__{spec.algo}__"
+           f"{spec.merge_policy if spec.merge else 'nomerge'}")
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump([r.__dict__ for r in hist], f, indent=2, default=str)
+    with open(os.path.join(args.out, tag + ".spec.json"), "w") as f:
+        f.write(spec.to_json())
     save_pytree(os.path.join(args.out, tag + ".npz"), sim.params)
     print(f"final accuracy: {hist[-1].accuracy:.4f} -> {args.out}/{tag}.json")
 

@@ -9,3 +9,4 @@ from repro.models.model import (
     D_FEAT,
 )
 from repro.models.cnn import cnn_init, cnn_forward, cnn_loss, cnn_accuracy
+from repro.models.linear import linear_init, linear_loss, linear_accuracy

@@ -1,0 +1,29 @@
+"""Linear softmax classifier — the toy-task model for ablation sweeps and
+tests (pairs with data/toy.py blobs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def linear_init(key, dim: int, num_classes: int):
+    k1, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (dim, num_classes)) * 0.01,
+        "b": jnp.zeros((num_classes,)),
+    }
+
+
+def linear_loss(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), 1
+    )[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def linear_accuracy(params, x, y) -> float:
+    logits = np.asarray(x) @ np.asarray(params["w"]) + np.asarray(params["b"])
+    return float((logits.argmax(-1) == np.asarray(y)).mean())

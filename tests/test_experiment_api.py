@@ -1,0 +1,354 @@
+"""Tests for the declarative experiment API: ExperimentSpec round-trip,
+the scenario registry vs. the historical launcher assembly, pluggable
+merge policies end-to-end, robust aggregators under poisoning, and the
+merge_at schedule normalization."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import FLConfig, MERGE_POLICIES, SCENARIOS, build_scenario
+from repro.core.federation import Scenario
+from repro.data import DataAttack, NetworkDelay, PacketLoss, label_flip
+from repro.launch.experiment import (
+    ExperimentSpec,
+    FL_DATASETS,
+    FL_MODELS,
+    PARTITIONS,
+    build_simulator,
+    run_experiment,
+    validate_spec,
+)
+
+K = 8
+
+
+def _toy_spec(**kw) -> ExperimentSpec:
+    """Tiny blobs run: milliseconds per round."""
+    base = dict(
+        model="linear",
+        dataset="blobs",
+        n_train=K * 120,
+        n_test=300,
+        data_kwargs={"num_classes": 4, "dim": 8},
+        partition="class_pairs",
+        partition_kwargs={"n_per": 120},
+        num_clients=K,
+        lr_local=0.1,
+        merge_at=(2,),
+        threshold=0.6,
+        rounds=5,
+        local_epochs=2,
+        steps_per_epoch=5,
+        batch_size=16,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# spec serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = _toy_spec(scenario="poisoning",
+                     scenario_kwargs={"client_ids": [0, 1], "num_classes": 4},
+                     aggregator="trimmed", merge_policy="cosine",
+                     merge_at=(1, 3), seed=7)
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.merge_at == (1, 3)          # list -> tuple on the way in
+    assert ExperimentSpec.from_json(again.to_json()) == again
+
+
+def test_spec_from_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ExperimentSpec fields"):
+        ExperimentSpec.from_json(json.dumps({"modle": "cnn_mnist"}))
+
+
+def test_validate_spec_names_available_entries():
+    with pytest.raises(KeyError, match="available"):
+        validate_spec(_toy_spec(scenario="nope"))
+    with pytest.raises(KeyError, match="available"):
+        validate_spec(_toy_spec(merge_policy="nope"))
+    with pytest.raises(ValueError, match="aggregator"):
+        validate_spec(_toy_spec(aggregator="meean"))
+    with pytest.raises(ValueError, match="algo"):
+        validate_spec(_toy_spec(algo="scafold"))
+    validate_spec(_toy_spec(mesh="none"))   # same spelling resolve_mesh takes
+    for reg, names in ((SCENARIOS, ("normal", "packet_loss", "drop",
+                                    "network_delay", "poisoning", "adverse")),
+                       (MERGE_POLICIES, ("pearson", "cosine", "random-pairs",
+                                         "none"))):
+        for n in names:
+            assert n in reg
+
+
+# ---------------------------------------------------------------------------
+# FLConfig.merge_at normalization (deprecated kwargs keep working)
+# ---------------------------------------------------------------------------
+
+def test_merge_at_from_deprecated_kwargs():
+    fl = FLConfig(merge_round=2, merge_rounds=(5, 3))
+    assert fl.merge_at == (2, 3, 5)
+    # aliases are kept verbatim (merge_at is the field to read)
+    assert fl.merge_round == 2 and fl.merge_rounds == (5, 3)
+
+
+def test_merge_at_round_trips_and_overrides():
+    fl = FLConfig(merge_at=(6, 1))
+    assert fl.merge_at == (1, 6)
+    assert fl.merge_round is None and fl.merge_rounds is None
+    # round-tripping through __dict__ (the test-suite idiom) is stable,
+    # including the empty schedule and deprecated-kwargs construction
+    for f in (fl, FLConfig(merge_at=()), FLConfig(merge_round=2)):
+        assert FLConfig(**{**f.__dict__}).merge_at == f.merge_at
+    # overriding merge_at through __dict__ works even when the new
+    # schedule drops the old rounds entirely
+    assert FLConfig(**{**FLConfig().__dict__, "merge_at": (2,)}).merge_at == (2,)
+
+
+def test_conflicting_merge_schedule_raises_loudly():
+    """Overriding a deprecated alias on a normalized config must not be
+    silently discarded (the old override idiom keeps failing fast)."""
+    fl = FLConfig()
+    with pytest.raises(ValueError, match="conflicting merge schedule"):
+        FLConfig(**{**fl.__dict__, "merge_round": 7})
+    with pytest.raises(ValueError, match="conflicting merge schedule"):
+        FLConfig(merge_at=(5,), merge_round=2)
+    # consistent combinations stay accepted; the default merge_round=4 is
+    # NOT injected into the check when merge_at is explicit
+    assert FLConfig(merge_at=(2, 4), merge_round=2).merge_at == (2, 4)
+    assert FLConfig(merge_at=(2,), merge_rounds=(2,)).merge_at == (2,)
+    assert FLConfig(merge_at=(2,), merge_rounds=()).merge_at == (2,)
+
+
+def test_merge_at_default_matches_old_default():
+    assert FLConfig().merge_at == (4,)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry == the old launch/train.py build_scenario
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_schedules_match_old_builder():
+    """The registered packet_loss / network_delay factories produce the
+    exact fault schedules the old if-chain hard-coded."""
+    for seed in (0, 3):
+        sc = build_scenario("packet_loss", 10, seed)
+        old = PacketLoss(prob=0.6, affected_frac=0.5, seed=seed)
+        np.testing.assert_array_equal(
+            sc.packet_loss.schedule(10, 12), old.schedule(10, 12))
+        sc = build_scenario("network_delay", 10, seed)
+        old = NetworkDelay(max_delay=2, affected_frac=0.5, seed=seed)
+        np.testing.assert_array_equal(
+            sc.network_delay.schedule(10, 12), old.schedule(10, 12))
+    assert build_scenario("normal", 10, 0) == Scenario(name="normal")
+
+
+def test_poisoning_scenario_reproduces_old_flipped_shards():
+    """Regression for the docstring/behavior mismatch: the poisoning
+    Scenario now owns its label flipping and must reproduce the shards the
+    old launcher built by hand (label_flip with seed = run_seed + cid on
+    the first max(1, K*3//10) clients), bit-for-bit."""
+    rng = np.random.default_rng(0)
+    shards = [(rng.random((40, 4)).astype(np.float32),
+               rng.integers(0, 10, 40).astype(np.int32)) for _ in range(10)]
+    for seed in (0, 11):
+        sc = build_scenario("poisoning", 10, seed)
+        got = sc.apply_data_attacks(shards, seed)
+        poisoned = tuple(range(max(1, 10 * 3 // 10)))   # old launcher line
+        for cid, (x, y) in enumerate(shards):
+            exp_y = (label_flip(y, num_classes=10, flip_frac=1.0,
+                                seed=seed + cid)
+                     if cid in poisoned else y)
+            np.testing.assert_array_equal(got[cid][0], x)
+            np.testing.assert_array_equal(got[cid][1], exp_y)
+
+
+def test_adverse_scenario_composes_both_conditions():
+    sc = build_scenario("adverse", 10, 1)
+    assert sc.packet_loss is not None
+    assert sc.data_attacks and sc.data_attacks[0].kind == "label_flip"
+    assert sc.data_attacks[0].client_ids == (0, 1, 2)
+
+
+def test_composed_attacks_draw_independent_masks():
+    """Two fractional attacks on the same client must not corrupt the
+    identical row subset (each composed attack gets its own seed stride)."""
+    rng = np.random.default_rng(1)
+    x = rng.random((400, 3)).astype(np.float32)
+    y = rng.integers(0, 10, 400).astype(np.int32)
+    sc = Scenario(data_attacks=(
+        DataAttack(kind="label_flip", client_ids=(0,), flip_frac=0.5),
+        DataAttack(kind="feature_noise", client_ids=(0,), frac=0.5),
+    ))
+    (x2, y2), = sc.apply_data_attacks([(x, y)], seed=0)
+    flipped = y2 != y
+    noised = (x2 != x).any(axis=1)
+    overlap = (flipped & noised).sum() / max(flipped.sum(), 1)
+    assert 0.25 < overlap < 0.75, overlap   # ~50% expected, not 100%
+
+
+def test_spec_is_hashable():
+    spec = _toy_spec(scenario_kwargs={"client_ids": [0]})
+    assert isinstance(hash(spec), int)
+    assert len({spec, _toy_spec(scenario_kwargs={"client_ids": [0]})}) <= 2
+
+
+def test_data_attack_untargeted_clients_pass_through():
+    atk = DataAttack(kind="label_flip", client_ids=(1,), num_classes=4)
+    x = np.zeros((5, 2), np.float32)
+    y = np.arange(5, dtype=np.int32) % 4
+    x2, y2 = atk.apply(0, x, y, 0)
+    assert x2 is x and y2 is y
+
+
+# ---------------------------------------------------------------------------
+# spec path == hand-assembled simulator (the old launcher, inlined)
+# ---------------------------------------------------------------------------
+
+def _records(hist):
+    return [{k: v for k, v in dataclasses.asdict(r).items() if k != "wall_s"}
+            for r in hist]
+
+
+@pytest.mark.parametrize("scenario", ["normal", "poisoning"])
+@pytest.mark.parametrize("pipeline", ["device", "host"])
+def test_spec_run_matches_hand_assembly_bit_for_bit(scenario, pipeline):
+    """run_experiment(spec) reproduces the pre-redesign assembly exactly:
+    same data, same poisoned shards, same FLConfig, same RoundRecords."""
+    from repro.core import AlgoConfig, FederatedSimulator
+    from repro.configs import cnn_mnist
+    from repro.data import make_synthetic_mnist, partition_noniid_classes
+    from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+    spec = ExperimentSpec(scenario=scenario, rounds=3, merge_at=(1,),
+                          n_train=600, n_test=120, steps_per_epoch=2,
+                          local_epochs=2, pipeline=pipeline, seed=0)
+    _, hist_spec = run_experiment(spec, verbose=False)
+
+    # the old launch/train.py body, verbatim
+    ccfg = cnn_mnist.config()
+    x_tr, y_tr, x_te, y_te = make_synthetic_mnist(600, 120, seed=0)
+    parts = partition_noniid_classes(y_tr, 10, seed=0)
+    poisoned = tuple(range(3)) if scenario == "poisoning" else ()
+    shards = []
+    for cid, p in enumerate(parts):
+        x, y = x_tr[p], y_tr[p]
+        if cid in poisoned:
+            y = label_flip(y, num_classes=10, flip_frac=1.0, seed=0 + cid)
+        shards.append((x, y))
+    fl = FLConfig(
+        algo=AlgoConfig(algorithm="scaffold", lr_local=0.05),
+        num_rounds=3, local_epochs=2, steps_per_epoch=2,
+        merge_enabled=True, merge_round=1, threshold=0.7,
+        max_group_size=3, pipeline=pipeline, seed=0,
+    )
+    sim = FederatedSimulator(
+        init_params_fn=lambda k: cnn_init(k, ccfg),
+        loss_fn=lambda p, b: cnn_loss(p, ccfg, b),
+        eval_fn=lambda p: cnn_accuracy(p, ccfg, x_te, y_te),
+        client_shards=shards, fl=fl,
+        scenario=Scenario(name=scenario),
+    )
+    hist_old = sim.run(verbose=False)
+    assert _records(hist_spec) == _records(hist_old)
+
+
+# ---------------------------------------------------------------------------
+# pluggable merge policies end-to-end
+# ---------------------------------------------------------------------------
+
+def test_cosine_policy_end_to_end():
+    spec = _toy_spec(merge_policy="cosine", threshold=0.9)
+    sim, hist = run_experiment(spec, verbose=False)
+    assert hist[2].merged_groups                      # something merged
+    assert hist[-1].active_nodes_end < K
+    assert hist[-1].accuracy > 0.8
+
+
+def test_none_policy_never_merges():
+    sim, hist = run_experiment(_toy_spec(merge_policy="none"), verbose=False)
+    assert all(not r.merged_groups for r in hist)
+    assert all(r.active_nodes_end == K for r in hist)
+    assert hist[-1].accuracy > 0.8
+
+
+def test_random_pairs_policy_pairs_active_clients():
+    sim, hist = run_experiment(
+        _toy_spec(merge_policy="random-pairs"), verbose=False)
+    groups = hist[2].merged_groups
+    assert groups and all(len(g) == 2 for g in groups)
+    assert hist[2].active_nodes_end == K - len(groups)
+    # deterministic given the seed
+    _, hist2 = run_experiment(
+        _toy_spec(merge_policy="random-pairs"), verbose=False)
+    assert [r.merged_groups for r in hist] == [r.merged_groups for r in hist2]
+
+
+def test_pearson_policy_matches_direct_flconfig_selection():
+    """FLConfig defaults select the pearson policy; a spec naming it
+    explicitly changes nothing."""
+    _, h1 = run_experiment(_toy_spec(), verbose=False)
+    _, h2 = run_experiment(_toy_spec(merge_policy="pearson"), verbose=False)
+    assert _records(h1) == _records(h2)
+
+
+def test_unknown_policy_fails_at_construction():
+    with pytest.raises(KeyError, match="merge policy"):
+        build_simulator(_toy_spec(merge_policy="typo"))
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation under attack, spec-selected
+# ---------------------------------------------------------------------------
+
+def test_median_aggregator_beats_sign_flip_attackers():
+    """Two sign-flipping model poisoners (scaled x3): the coordinate-wise
+    median shrugs them off while the weighted mean degrades."""
+    accs = {}
+    for agg in ("median", "mean"):
+        spec = _toy_spec(
+            scenario="poisoning",
+            scenario_kwargs={"client_ids": [], "num_classes": 4,
+                             "sign_flip_ids": [0, 1], "sign_flip_scale": 3.0},
+            aggregator=agg, merge=False, rounds=6,
+        )
+        sim = build_simulator(spec)
+        assert sim.scenario.model_poison == {0: -3.0, 1: -3.0}
+        hist = sim.run(verbose=False)
+        accs[agg] = float(np.mean([r.accuracy for r in hist[-3:]]))
+    assert accs["median"] > accs["mean"] + 0.05, accs
+    assert accs["median"] > 0.7, accs
+
+
+def test_adverse_scenario_with_trimmed_aggregator_runs_green():
+    """Acceptance: the combined packet-loss + poisoning mix with a trimmed
+    -mean server — impossible to express before the redesign — end to end."""
+    spec = _toy_spec(
+        scenario="adverse",
+        scenario_kwargs={"client_ids": [0, 1], "num_classes": 4},
+        aggregator="trimmed", rounds=6,
+    )
+    sim, hist = run_experiment(spec, verbose=False)
+    assert sim.scenario.packet_loss is not None
+    assert sim.scenario.data_attacks
+    assert hist[2].merged_groups                      # merge still fires
+    assert hist[-1].accuracy > 0.6
+
+
+# ---------------------------------------------------------------------------
+# registries are open
+# ---------------------------------------------------------------------------
+
+def test_registries_accept_new_entries():
+    name = "_test_only_entry"
+    for reg in (FL_MODELS, FL_DATASETS, PARTITIONS, SCENARIOS,
+                MERGE_POLICIES):
+        if name not in reg:
+            reg.register(name)(lambda *a, **k: None)
+        assert name in reg
+        with pytest.raises(KeyError, match="duplicate"):
+            reg.register(name)(lambda *a, **k: None)

@@ -165,9 +165,10 @@ def test_network_delay_stale_updates():
 
 
 def test_periodic_remerging():
-    """merge_rounds triggers additional merge passes among active nodes."""
+    """A multi-entry merge_at schedule triggers additional merge passes
+    among the still-active nodes."""
     sim = _sim(threshold=0.3)
-    sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "merge_rounds": (4,)})
+    sim.fl = sim.fl.__class__(**{**sim.fl.__dict__, "merge_at": (2, 4)})
     hist = sim.run()
     # active_nodes reports the set the round TRAINED with (pre-merge);
     # active_nodes_end is the population after the round's merge
