@@ -15,6 +15,7 @@ correlation error. Emits ``BENCH_merge.json`` next to the CWD.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -105,6 +106,53 @@ def run(out_path: str = "BENCH_merge.json"):
     copy_ms = _time_ms(copy_only)
     device_apply_ms = max(_time_ms(apply_device) - copy_ms, 1e-3)
 
+    # --- fused-scan correlation at K=64 ---------------------------------
+    # the per-leaf loop dispatches once per leaf; the fused path packs the
+    # views and runs ONE jitted lax.scan over fixed-width chunks. Two
+    # regimes at K=64: a transformer-like tree of MANY SMALL leaves (the
+    # dispatch-bound case the fusion targets) and a CNN-like tree of few
+    # large leaves (compute-bound; the loop's zero-copy streaming wins, so
+    # it stays the default).
+    rng64 = np.random.default_rng(1)
+
+    def _regime(tree):
+        loop_ms = _time_ms(lambda: pearson_tree(tree))
+        fused_ms = _time_ms(lambda: pearson_tree(tree, fused=True))
+        err = float(
+            np.abs(
+                np.asarray(pearson_tree(tree))
+                - np.asarray(pearson_tree(tree, fused=True))
+            ).max()
+        )
+        return {
+            "leaves": len(jax.tree_util.tree_leaves(tree)),
+            "M": sum(int(np.prod(l.shape[1:]))
+                     for l in jax.tree_util.tree_leaves(tree)),
+            "loop_ms": round(loop_ms, 3),
+            "fused_scan_ms": round(fused_ms, 3),
+            "fused_speedup": round(loop_ms / fused_ms, 2),
+            "fused_vs_loop_max_abs_err": err,
+        }
+
+    many_small = {
+        f"l{i}": jnp.asarray(
+            rng64.normal(size=(64, 64 + (i % 5) * 16)).astype(np.float32)
+        )
+        for i in range(512)
+    }
+    few_large = {
+        f"blk{i}": {
+            "w": jnp.asarray(rng64.normal(size=(64, 96, 192)).astype(np.float32)),
+            "b": jnp.asarray(rng64.normal(size=(64, 192)).astype(np.float32)),
+        }
+        for i in range(24)
+    }
+    scan_fusion = {
+        "K": 64,
+        "many_small_leaves": _regime(many_small),
+        "few_large_leaves": _regime(few_large),
+    }
+
     host_total = host_corr_ms + host_apply_ms
     device_total = stream_corr_ms + device_apply_ms
     result = {
@@ -119,7 +167,15 @@ def run(out_path: str = "BENCH_merge.json"):
         "speedup": round(host_total / device_total, 2),
         "stream_vs_oracle_max_abs_err": err,
         "groups": [list(g) for g in plan.groups],
+        "pearson_scan_fusion": scan_fusion,
     }
+    # preserve sections other benchmarks maintain (round_overlap,
+    # engine_rounds) instead of clobbering the whole file
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            prev = json.load(f)
+        for k, v in prev.items():
+            result.setdefault(k, v)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     for k, v in result.items():

@@ -18,4 +18,5 @@ from repro.core.fedavg import make_fedavg_round, fedavg_config
 from repro.core.fedprox import make_fedprox_round, fedprox_config
 from repro.core.federation import FLConfig, Scenario, FederatedSimulator, RoundRecord
 from repro.core.merge_policy import MERGE_POLICIES, MergePolicy, make_merge_policy
-from repro.core.scenarios import SCENARIOS, build_scenario
+from repro.core.scenarios import SCENARIOS, build_scenario, round_tables
+from repro.core.engine import RoundEngine

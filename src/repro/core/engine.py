@@ -1,0 +1,412 @@
+"""Compiled round engine: scan-over-rounds federation
+(``FLConfig.pipeline="engine"``).
+
+The per-round pipelines (``device``/``host``) re-enter Python every round:
+one jitted dispatch per round, host-drawn fault masks, host merge
+planning, a host stale-delta queue, and an eval that blocks the loop. At
+paper scale (small CNN, K=10-100) that host choreography dominates
+wall-clock. The engine compiles the loop itself:
+
+  * **Segments under one ``lax.scan``** — every run of rounds between
+    merge boundaries (capped by ``FLConfig.engine_max_segment``) is one
+    jitted, buffer-donating call whose step fuses batch gather -> train
+    round -> stale-delta ring buffer -> stale arrivals. Per-round scenario
+    randomness is pre-drawn into stacked (T, K) tables
+    (:func:`repro.core.scenarios.round_tables`) consumed as scan inputs.
+  * **Fused merge step** — a merge round runs train + streaming
+    tree-Pearson + on-device greedy merge planning
+    (:func:`repro.core.merging.device_merge_plan`) + the W-mix merge apply
+    in a single jitted call; only the (K, K) assignment matrix crosses to
+    host, where the thin shell moves shard rows and rebuilds the flat
+    device buffers (``FederatedSimulator._merge_bookkeeping``). Policies
+    without a device similarity program (cosine/random-pairs/none) fall
+    back to host planning at the boundary — the scan segments still apply.
+  * **Eval off the round loop** — the scan stacks per-round params and
+    losses; ``RoundRecord``s (including the per-round eval) materialize
+    once per segment from the stacked outputs, after the segment's
+    compute has been dispatched.
+
+The stale-delta queue is a fixed-capacity device ring buffer
+(capacity K * (max_delay + 1): at most K enqueues per round and a slot
+lives at most ``max_delay`` rounds, so a live slot can never be
+overwritten). Arrivals are accumulated in f32 on device, where the
+per-round oracle applies them sequentially in f64 on host — the one
+documented tolerance vs the ``device`` pipeline (network-delay scenarios
+agree to ~1e-6; everything else is bit-for-bit, see
+tests/test_engine.py). A second, measure-zero edge: the device planner
+compares correlations against the f32-cast threshold while the host
+planner compares against the f64 value, so a correlation EXACTLY equal
+to ``float32(threshold)`` (a ~3e-9-wide window) could group on device
+but not on host; real similarity values never land there (the planner
+property test nudges generated values off the knife edge).
+
+Mesh-aware mode: the carried state keeps the pod-sharded layout contract
+(stacked client axis over 'pod', globals replicated) via explicit
+``out_shardings`` on the compiled segment/merge programs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as SH
+from repro.core.federation import RoundRecord, _gather_batches
+from repro.core.merge_policy import MergePolicy
+from repro.core.merging import (
+    apply_merge_device,
+    device_merge_plan,
+    groups_from_assignment,
+    mix_stacked_tree,
+    plan_from_groups,
+)
+from repro.core.scaffold import make_round_fn
+from repro.core.scenarios import round_tables
+
+# empty ring-buffer slot sentinel: an arrival round that never comes
+_NEVER = np.int32(np.iinfo(np.int32).max)
+
+
+class RoundEngine:
+    """Drives a :class:`FederatedSimulator` whose ``pipeline="engine"``.
+
+    The simulator stays the host shell (shards, schedules, telemetry,
+    history); the engine owns the compiled programs and the device-side
+    round state. ``programs`` can be shared between engines of identical
+    configuration (same model/loss, FLConfig, scenario shape) so a second
+    run hits the jit cache — benchmarks use this for warm timings.
+    """
+
+    def __init__(self, sim, programs: Optional[Dict] = None):
+        fl = sim.fl
+        if fl.pipeline != "engine":
+            raise ValueError("RoundEngine requires FLConfig.pipeline='engine'")
+        if fl.participation < 1.0:
+            raise ValueError(
+                "engine pipeline requires full participation "
+                "(participation=1.0): per-round participation sampling is "
+                "host randomness that cannot be pre-drawn shape-statically"
+            )
+        if fl.engine_max_segment < 1:
+            raise ValueError("engine_max_segment must be >= 1")
+        self.sim = sim
+        self.fl = fl
+        # built from the simulator's OWN pre-drawn schedules, so both
+        # pipelines consume identical fault draws by construction
+        self.tables = round_tables(
+            sim.scenario, sim.K, fl.num_rounds, fl.steps_per_epoch,
+            fl.local_steps,
+            loss_sched=sim._loss_sched, delay_sched=sim._delay_sched,
+        )
+        maxd = int(self.tables.delay.max()) if self.tables.delay.size else 0
+        self._has_delay = maxd > 0
+        self.cap = sim.K * (maxd + 1) if self._has_delay else 0
+        self._merge_set = (
+            {t for t in fl.merge_at if 0 <= t < fl.num_rounds}
+            if fl.merge_enabled else set()
+        )
+        # on-device planning needs a jit-traceable similarity AND the base
+        # class's greedy plan (a policy overriding plan() — random-pairs,
+        # none — keeps its host semantics via the fallback)
+        pol = sim.policy
+        self._device_plan = (
+            type(pol).plan is MergePolicy.plan
+            and callable(getattr(pol, "device_similarity", None))
+        )
+        self.programs = programs if programs is not None else self._build_programs()
+
+    # ------------------------------------------------------------------
+    def _build_programs(self) -> Dict:
+        sim, fl = self.sim, self.fl
+        S, B = fl.local_steps, fl.batch_size
+        cap, has_delay = self.cap, self._has_delay
+        lr_g = fl.algo.lr_global
+        thr, G, alpha = fl.threshold, fl.max_group_size, fl.alpha
+        round_body = make_round_fn(sim.loss_fn, fl.algo)
+        pol = sim.policy
+        mesh = sim.mesh
+
+        batch_sh = None
+        if mesh is not None:
+            rep = NamedSharding(mesh, P())
+            batch_sh = NamedSharding(mesh, P(SH.client_axis(mesh, sim.K)))
+
+        def core(state, const, xrow):
+            """One fused round: gather -> train -> stale enqueue ->
+            stale arrivals. Exactly the per-round device pipeline's order
+            (merge, which commutes with the params-only arrival update,
+            happens at the jitted merge step's tail instead)."""
+            params, c_g, c_l, weights, active, buf, buf_w, buf_arr, wptr = state
+            sx, sy, soff, slen, bkey, poison = const
+            t = xrow["t"]
+            key = jax.random.fold_in(bkey, t)
+            batches = _gather_batches(key, sx, sy, soff, slen, S, B)
+            if batch_sh is not None:
+                batches = jax.lax.with_sharding_constraint(
+                    batches, {"x": batch_sh, "y": batch_sh}
+                )
+            x_old = params
+            params, c_g, c_l, x_locals, losses = round_body(
+                params, c_g, c_l, batches, xrow["steps_mask"], weights,
+                active, xrow["round_mask"], poison,
+            )
+            if has_delay:
+                # enqueue delayed senders' deltas with their send-time
+                # weight (fixed-capacity ring; rank-compacted slots, the
+                # cap-index means "not enqueued" and is dropped)
+                e = (xrow["delay"] > 0) & (active > 0)
+                ei = e.astype(jnp.int32)
+                slot = jnp.where(e, (wptr + jnp.cumsum(ei) - 1) % cap, cap)
+                dx = jax.tree_util.tree_map(
+                    lambda xl, xo: xl.astype(jnp.float32)
+                    - xo.astype(jnp.float32)[None],
+                    x_locals, x_old,
+                )
+                buf = jax.tree_util.tree_map(
+                    lambda b, d: b.at[slot].set(d, mode="drop"), buf, dx
+                )
+                buf_w = buf_w.at[slot].set(weights, mode="drop")
+                buf_arr = buf_arr.at[slot].set(t + xrow["delay"], mode="drop")
+                wptr = (wptr + jnp.sum(ei)) % cap
+                # apply deltas arriving this round (send-time weight over
+                # the total, which merging preserves)
+                arrived = buf_arr <= t
+
+                def _apply(p_tree):
+                    coef = jnp.where(arrived, buf_w, 0.0) * (
+                        lr_g / jnp.sum(weights)
+                    )
+                    return jax.tree_util.tree_map(
+                        lambda p, b: (
+                            p.astype(jnp.float32)
+                            + jnp.tensordot(coef, b, axes=1)
+                        ).astype(p.dtype),
+                        p_tree, buf,
+                    )
+
+                params = jax.lax.cond(
+                    jnp.any(arrived), _apply, lambda p: p, params
+                )
+                buf_arr = jnp.where(arrived, _NEVER, buf_arr)
+            state = (params, c_g, c_l, weights, active, buf, buf_w, buf_arr,
+                     wptr)
+            return state, x_locals, losses
+
+        def segment(state, const, xs):
+            def step(st, xrow):
+                st, _x_locals, losses = core(st, const, xrow)
+                return st, (st[0], losses)
+
+            return jax.lax.scan(step, state, xs)
+
+        def merge_device(state, const, xrow):
+            """Fused merge round: train + streaming tree-Pearson +
+            on-device plan + W-mix of the control state. Weights/active
+            update on device; only (A, active_new) cross to host for the
+            shard bookkeeping."""
+            state, x_locals, losses = core(state, const, xrow)
+            params, c_g, c_l, weights, active, *rest = state
+            corr = pol.device_similarity(x_locals)
+            W, A, act_new = device_merge_plan(
+                corr, active, weights,
+                threshold=thr, max_group_size=G, alpha=alpha,
+            )
+            # mirror the host path's "skip the apply on empty plans":
+            # identity-mix (bit-exact no-op) when nothing grouped
+            has_groups = jnp.any(jnp.sum(A, axis=1) > 1.5)
+            K = A.shape[0]
+            W_eff = jnp.where(has_groups, W, jnp.eye(K, dtype=W.dtype))
+            c_l = mix_stacked_tree(W_eff, c_l)
+            weights = jnp.where(has_groups, A @ weights, weights)
+            state = (params, c_g, c_l, weights, act_new, *rest)
+            return state, losses, A, act_new
+
+        def merge_host(state, const, xrow):
+            """Merge-round train step for host-planned policies: returns
+            the local models so the policy's similarity/plan run on host
+            exactly as in the per-round device pipeline."""
+            state, x_locals, losses = core(state, const, xrow)
+            return state, losses, x_locals
+
+        if mesh is not None:
+            rep_tree = jax.tree_util.tree_map(lambda _: rep, sim.params)
+            stacked_tree = SH.client_stack_shardings(mesh, sim.c_locals)
+            buf_tree = jax.tree_util.tree_map(lambda _: rep, sim.params)
+            state_sh = (rep_tree, rep_tree, stacked_tree, rep, rep,
+                        buf_tree, rep, rep, rep)
+            seg = jax.jit(segment, donate_argnums=(0,),
+                          out_shardings=(state_sh, (rep_tree, rep)))
+            m_dev = jax.jit(merge_device, donate_argnums=(0,),
+                            out_shardings=(state_sh, rep, rep, rep))
+            m_host = jax.jit(merge_host, donate_argnums=(0,),
+                             out_shardings=(state_sh, rep, stacked_tree))
+        else:
+            seg = jax.jit(segment, donate_argnums=(0,))
+            m_dev = jax.jit(merge_device, donate_argnums=(0,))
+            m_host = jax.jit(merge_host, donate_argnums=(0,))
+        return {"segment": seg, "merge_device": m_dev, "merge_host": m_host}
+
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        sim, cap = self.sim, self.cap
+        buf = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((cap,) + p.shape, jnp.float32), sim.params
+        )
+        buf_w = jnp.zeros((cap,), jnp.float32)
+        buf_arr = jnp.full((cap,), _NEVER, jnp.int32)
+        state = (
+            sim.params, sim.c_global, sim.c_locals,
+            jnp.asarray(sim.weights), jnp.asarray(sim.active),
+            buf, buf_w, buf_arr, jnp.asarray(0, jnp.int32),
+        )
+        if sim.mesh is not None:
+            rep = NamedSharding(sim.mesh, P())
+            state = (
+                state[0], state[1], state[2],
+                jax.device_put(state[3], rep), jax.device_put(state[4], rep),
+                jax.device_put(state[5], rep), jax.device_put(state[6], rep),
+                jax.device_put(state[7], rep), jax.device_put(state[8], rep),
+            )
+        return state
+
+    def _const(self):
+        sim = self.sim
+        return (
+            sim._shard_x, sim._shard_y, sim._shard_off, sim._shard_len,
+            sim._batch_key, jnp.asarray(self.tables.poison),
+        )
+
+    def _xs(self, t0: int, t1: int):
+        tb = self.tables
+        return {
+            "t": jnp.arange(t0, t1, dtype=jnp.int32),
+            "steps_mask": jnp.asarray(tb.steps_mask[t0:t1]),
+            "round_mask": jnp.asarray(tb.round_mask[t0:t1]),
+            "delay": jnp.asarray(tb.delay[t0:t1]),
+        }
+
+    def _xrow(self, t: int):
+        return {k: v[0] for k, v in self._xs(t, t + 1).items()}
+
+    # ------------------------------------------------------------------
+    def _record(self, t: int, accuracy: float, losses_np, active_pre,
+                merged_groups=(), wall_s: float = 0.0):
+        """Round accounting through the simulator's single shared helper
+        (same formulas as the per-round loop by construction)."""
+        return self.sim._round_record(
+            t, accuracy, losses_np, active_pre, self.tables.round_mask[t],
+            merged_groups, wall_s,
+        )
+
+    def _run_segment(self, state, t0: int, t1: int, verbose: bool):
+        sim = self.sim
+        wall0 = time.time()
+        state, (p_stack, l_stack) = self.programs["segment"](
+            state, self._const(), self._xs(t0, t1)
+        )
+        losses_np = np.asarray(l_stack)
+        wall = (time.time() - wall0) / (t1 - t0)
+        active_pre = sim.active.copy()
+        for i, t in enumerate(range(t0, t1)):
+            params_t = jax.tree_util.tree_map(lambda l: l[i], p_stack)
+            acc = float(sim.eval_fn(params_t))
+            rec = self._record(t, acc, losses_np[i], active_pre, (), wall)
+            sim.history.append(rec)
+            if verbose:
+                print(
+                    f"round {t:2d} acc={acc:.4f} loss={rec.mean_loss:.4f} "
+                    f"active={rec.active_nodes} sent={rec.updates_sent}"
+                )
+        return state
+
+    def _run_merge_round(self, state, t: int, verbose: bool):
+        sim, fl = self.sim, self.fl
+        active_pre = sim.active.copy()
+        wall0 = time.time()
+        if self._device_plan:
+            state, losses, A, act_new = self.programs["merge_device"](
+                state, self._const(), self._xrow(t)
+            )
+            groups, unmerged = groups_from_assignment(
+                np.asarray(A), np.asarray(act_new)
+            )
+            plan = plan_from_groups(
+                sim.K, groups, unmerged, sim.weights.astype(np.int64),
+                alpha=fl.alpha,
+            )
+            sim.merge_plan = plan
+            if plan.groups:
+                # controls were mixed on device; the host shell only moves
+                # shard rows, refreshes weights/active mirrors, and
+                # rebuilds the flat row buffers
+                sim._merge_bookkeeping(plan)
+            else:
+                sim.active = plan.active.astype(np.float32)
+        else:
+            state, losses, x_locals = self.programs["merge_host"](
+                state, self._const(), self._xrow(t)
+            )
+            sim_matrix = sim.policy.similarity(x_locals)
+            plan = sim.policy.plan(sim_matrix, sim.weights, sim.active)
+            sim.merge_plan = plan
+
+            def _rep(a):
+                # keep the carried state on the mesh's replicated layout so
+                # the next segment call reuses its compiled program
+                a = jnp.asarray(a)
+                if sim.mesh is not None:
+                    a = jax.device_put(a, NamedSharding(sim.mesh, P()))
+                return a
+
+            if plan.groups:
+                c_l = apply_merge_device(plan, state[2])
+                if sim.mesh is not None:
+                    # apply_merge_device lets GSPMD infer the output layout;
+                    # re-pin the stacked-client contract so the next segment
+                    # call matches its compiled input shardings
+                    c_l = jax.device_put(
+                        c_l, SH.client_stack_shardings(sim.mesh, c_l)
+                    )
+                sim._merge_bookkeeping(plan)
+                state = (state[0], state[1], c_l,
+                         _rep(sim.weights), _rep(sim.active), *state[5:])
+            else:
+                sim.active = plan.active.astype(np.float32)
+                state = (*state[:4], _rep(sim.active), *state[5:])
+        acc = float(sim.eval_fn(state[0]))
+        wall = time.time() - wall0
+        rec = self._record(
+            t, acc, np.asarray(losses), active_pre, plan.groups, wall
+        )
+        sim.history.append(rec)
+        if verbose:
+            print(
+                f"round {t:2d} acc={acc:.4f} loss={rec.mean_loss:.4f} "
+                f"active={rec.active_nodes} sent={rec.updates_sent}"
+                + (f" merged={plan.groups}" if plan.groups else "")
+            )
+        return state
+
+    # ------------------------------------------------------------------
+    def run(self, verbose: bool = False) -> List[RoundRecord]:
+        sim, fl = self.sim, self.fl
+        T = fl.num_rounds
+        state = self._init_state()
+        t = 0
+        while t < T:
+            if t in self._merge_set:
+                state = self._run_merge_round(state, t, verbose)
+                t += 1
+            else:
+                boundary = min([b for b in self._merge_set if b > t] + [T])
+                end = min(boundary, t + fl.engine_max_segment)
+                state = self._run_segment(state, t, end, verbose)
+                t = end
+        # leave the simulator's device state current for checkpoints etc.
+        sim.params, sim.c_global, sim.c_locals = state[0], state[1], state[2]
+        return sim.history

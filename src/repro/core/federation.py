@@ -3,7 +3,10 @@ merge-at-round-t intermediary-node mechanism.
 
 The simulator owns all *host-side* state (numpy client shards, merge
 bookkeeping, fault schedules) and calls one jitted round function per
-communication round. WHO merges is delegated to the MergePolicy named by
+communication round — or, with ``FLConfig.pipeline="engine"``, hands the
+whole loop to the compiled round engine (core/engine.RoundEngine), which
+runs segments of rounds under one ``lax.scan`` and keeps this class as
+the thin host shell (shard bookkeeping, records, checkpoints). WHO merges is delegated to the MergePolicy named by
 ``FLConfig.merge_policy`` (core/merge_policy.MERGE_POLICIES); the
 scenario owns its data attacks and applies them to the shards here at
 construction (core/scenarios.SCENARIOS has the registered factories). Merging never changes device-side shapes: retired
@@ -81,16 +84,29 @@ class FLConfig:
     # silently ignored schedule.
     merge_round: Optional[int] = None
     merge_rounds: Optional[Tuple[int, ...]] = None
-    # route the streamed correlation chunks through the Pallas kernel
-    # (interpret=True on CPU; the at-scale path)
-    use_kernel_pearson: bool = False
+    # which implementation accumulates the streamed correlation chunks:
+    # "auto" (default) picks the Pallas kernel on TPU/GPU and the jnp
+    # accumulation on CPU; "pallas"/"jnp" force one backend.
+    pearson_backend: str = "auto"
+    # DEPRECATED alias for pearson_backend, kept as an accepted kwarg and
+    # left exactly as passed (None when unset): True forces the Pallas
+    # kernel, False forces jnp. A value that contradicts an explicit
+    # pearson_backend raises — never a silently ignored override.
+    use_kernel_pearson: Optional[bool] = None
     # "device" (default): zero-copy streaming merge pipeline — per-leaf
     # tree-Pearson, jitted merge-apply with donated buffers, on-device
     # batch sampling; no (K, M) materialization, no mid-round device_get.
     # "host": the original numpy oracle pipeline (materialized client
     # matrix, f64 host merge-apply, numpy batch gather) kept for A/B
     # parity tests and benchmarks.
+    # "engine": the compiled round engine (core/engine.RoundEngine) —
+    # segments of rounds under one lax.scan, on-device merge planning,
+    # fixed-capacity stale-delta ring buffers; device/host remain the
+    # per-round oracles it is parity-tested against.
     pipeline: str = "device"
+    # engine pipeline: cap on rounds per compiled scan segment (bounds the
+    # stacked per-round outputs a segment materializes for eval)
+    engine_max_segment: int = 32
     # double-buffered batch gather (device pipeline): round t+1's gather is
     # dispatched while round t's round_fn computes, so the gather is off
     # the round loop's critical path. Off = the synchronous oracle order.
@@ -125,6 +141,39 @@ class FLConfig:
                     f"the deprecated kwargs unset)"
                 )
         object.__setattr__(self, "merge_at", at)
+        # normalize the Pearson backend choice; the deprecated
+        # use_kernel_pearson alias stays verbatim (same pattern as
+        # merge_round/merge_rounds above) and only constrains the choice
+        if self.pearson_backend not in ("auto", "pallas", "jnp"):
+            raise ValueError(
+                f"FLConfig.pearson_backend must be 'auto', 'pallas' or "
+                f"'jnp', got {self.pearson_backend!r}"
+            )
+        if self.use_kernel_pearson is not None and self.pearson_backend != "auto":
+            want = "pallas" if self.use_kernel_pearson else "jnp"
+            if want != self.pearson_backend:
+                raise ValueError(
+                    f"conflicting Pearson backend: pearson_backend="
+                    f"{self.pearson_backend!r} vs deprecated "
+                    f"use_kernel_pearson={self.use_kernel_pearson} "
+                    f"(= {want!r}); set pearson_backend only"
+                )
+
+    @property
+    def pearson_kernel(self) -> bool:
+        """Resolved backend decision: route the streamed correlation
+        chunks through the Pallas kernel? Explicit settings win; "auto"
+        picks the kernel on accelerators and jnp accumulation on CPU."""
+        if self.pearson_backend != "auto":
+            return self.pearson_backend == "pallas"
+        if self.use_kernel_pearson is not None:
+            return bool(self.use_kernel_pearson)
+        return jax.default_backend() in ("tpu", "gpu")
+
+    @property
+    def pearson_interpret(self) -> bool:
+        """Pallas interpret mode: only off on a real accelerator."""
+        return jax.default_backend() == "cpu"
 
     @property
     def local_steps(self) -> int:
@@ -194,16 +243,20 @@ class FederatedSimulator:
         scenario: Optional[Scenario] = None,
         mesh: Optional[Mesh] = None,
     ):
-        if fl.pipeline not in ("device", "host"):
+        if fl.pipeline not in ("device", "host", "engine"):
             raise ValueError(
-                f"FLConfig.pipeline must be 'device' or 'host', got {fl.pipeline!r}"
+                f"FLConfig.pipeline must be 'device', 'host' or 'engine', "
+                f"got {fl.pipeline!r}"
             )
-        if mesh is not None and fl.pipeline != "device":
-            raise ValueError("mesh-aware mode requires pipeline='device'")
+        if mesh is not None and fl.pipeline not in ("device", "engine"):
+            raise ValueError(
+                "mesh-aware mode requires pipeline='device' or 'engine'"
+            )
         self.fl = fl
         self.mesh = mesh
         self.scenario = scenario or Scenario()
         self.eval_fn = eval_fn
+        self.loss_fn = loss_fn  # the engine builds its own round programs
         # the scenario owns its data attacks: poisoned shards are built
         # here, before any weights/buffers are derived from them
         self.shards: List[Tuple[np.ndarray, np.ndarray]] = [
@@ -273,7 +326,7 @@ class FederatedSimulator:
         self._param_bytes = tree_bytes(self.params)
         self._batch_key = jax.random.PRNGKey(fl.seed)
         self._prefetched: Optional[Tuple[int, dict]] = None
-        if fl.pipeline == "device":
+        if fl.pipeline in ("device", "engine"):
             self._upload_shards()
 
     # ------------------------------------------------------------------
@@ -428,10 +481,17 @@ class FederatedSimulator:
             self.c_locals = jax.tree_util.tree_map(
                 jnp.asarray, apply_merge(plan, jax.device_get(self.c_locals))
             )
-        # intermediary node inherits the union of member data; retired
-        # members keep their slot (fixed shapes everywhere) but give up
-        # their rows — otherwise the flat device buffers hold every merged
-        # row twice and the gather keeps sampling retired clients
+        self._merge_bookkeeping(plan)
+        return plan.groups
+
+    def _merge_bookkeeping(self, plan):
+        """Host-side consequences of a merge plan, shared with the engine
+        pipeline (which mixes controls on device but keeps shard / weight
+        bookkeeping here): the intermediary node inherits the union of
+        member data; retired members keep their slot (fixed shapes
+        everywhere) but give up their rows — otherwise the flat device
+        buffers hold every merged row twice and the gather keeps sampling
+        retired clients."""
         for group in plan.groups:
             rep = group[0]
             xs = np.concatenate([self.shards[j][0] for j in group])
@@ -442,12 +502,48 @@ class FederatedSimulator:
                 self.shards[j] = (xj[:0], yj[:0])
         self.weights = merged_data_sizes(plan, self.weights).astype(np.float32)
         self.active = plan.active.astype(np.float32)
-        if self.fl.pipeline == "device":
+        if self.fl.pipeline in ("device", "engine"):
             self._upload_shards()  # representative shards grew
-        return plan.groups
 
     # ------------------------------------------------------------------
+    def _round_record(self, t: int, accuracy, losses, active_round,
+                      round_mask, merged=(), wall_s: float = 0.0
+                      ) -> RoundRecord:
+        """THE definition of per-round accounting, shared by the per-round
+        loop and the engine's per-segment materialization. ``active_round``
+        is the mask the round TRAINED with (pre-merge on merge rounds —
+        the PR 2 semantics); ``self.active`` has already been advanced past
+        any merge, so it supplies ``active_nodes_end``."""
+        sent = int((active_round * round_mask).sum())
+        mean_loss = float(
+            np.sum(np.asarray(losses) * active_round)
+            / max(active_round.sum(), 1)
+        )
+        return RoundRecord(
+            round=t,
+            accuracy=float(accuracy),
+            mean_loss=mean_loss,
+            active_nodes=int(active_round.sum()),
+            updates_sent=sent,
+            bytes_sent=sent * self._param_bytes,
+            active_nodes_end=int(self.active.sum()),
+            merged_groups=merged,
+            wall_s=wall_s,
+        )
+
     def run(self, verbose: bool = False) -> List[RoundRecord]:
+        if self.fl.pipeline == "engine":
+            from repro.core.engine import RoundEngine
+
+            # cache the compiled segment/merge programs on the simulator so
+            # repeated run() calls (and benchmark warm timings) skip the
+            # cold re-jit — mirrors the device pipeline jitting round_fn
+            # once in __init__
+            engine = RoundEngine(
+                self, programs=getattr(self, "_engine_programs", None)
+            )
+            self._engine_programs = engine.programs
+            return engine.run(verbose=verbose)
         fl = self.fl
         self._prefetched = None
         for t in range(fl.num_rounds):
@@ -508,27 +604,15 @@ class FederatedSimulator:
             self._apply_stale_updates(t)
 
             acc = self.eval_fn(self.params)
-            sent = int((active_round * round_mask).sum())
-            mean_loss = float(
-                np.sum(np.asarray(losses) * active_round)
-                / max(active_round.sum(), 1)
-            )
-            rec = RoundRecord(
-                round=t,
-                accuracy=acc,
-                mean_loss=mean_loss,
-                active_nodes=int(active_round.sum()),
-                updates_sent=sent,
-                bytes_sent=sent * self._param_bytes,
-                active_nodes_end=int(self.active.sum()),
-                merged_groups=merged,
-                wall_s=time.time() - t0,
+            rec = self._round_record(
+                t, acc, losses, active_round, round_mask, merged,
+                time.time() - t0,
             )
             self.history.append(rec)
             if verbose:
                 print(
-                    f"round {t:2d} acc={acc:.4f} loss={mean_loss:.4f} "
-                    f"active={rec.active_nodes} sent={sent}"
+                    f"round {t:2d} acc={acc:.4f} loss={rec.mean_loss:.4f} "
+                    f"active={rec.active_nodes} sent={rec.updates_sent}"
                     + (f" merged={merged}" if merged else "")
                 )
         return self.history

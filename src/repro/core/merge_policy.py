@@ -83,20 +83,29 @@ class PearsonPolicy(MergePolicy):
     original materialized (K, M) oracle."""
 
     def similarity(self, x_locals) -> np.ndarray:
-        if self.fl.pipeline == "device":
-            return np.asarray(
-                pearson_tree(
-                    x_locals,
-                    exclude_constant=self.fl.corr_exclude_constant,
-                    sample=self.fl.corr_sample,
-                    seed=self.fl.seed,
-                    use_kernel=self.fl.use_kernel_pearson,
-                )
-            )
+        return np.asarray(self.device_similarity(x_locals)) \
+            if self.fl.pipeline != "host" else self._host_similarity(x_locals)
+
+    def device_similarity(self, x_locals) -> jnp.ndarray:
+        """jnp similarity program — also called from inside the compiled
+        round engine's fused merge step (core/engine.py), so it must stay
+        jit-traceable. The backend (Pallas kernel vs jnp accumulation) is
+        the config's resolved choice (auto: kernel on TPU/GPU)."""
+        return pearson_tree(
+            x_locals,
+            exclude_constant=self.fl.corr_exclude_constant,
+            sample=self.fl.corr_sample,
+            seed=self.fl.seed,
+            use_kernel=self.fl.pearson_kernel,
+            interpret=self.fl.pearson_interpret,
+        )
+
+    def _host_similarity(self, x_locals) -> np.ndarray:
         X = self._materialized_matrix(x_locals)
-        if self.fl.use_kernel_pearson:
+        if self.fl.pearson_kernel:
             from repro.core.pearson import pearson_matrix_fast
-            return np.asarray(pearson_matrix_fast(jnp.asarray(X)))
+            return np.asarray(pearson_matrix_fast(
+                jnp.asarray(X), interpret=self.fl.pearson_interpret))
         return np.asarray(pearson_matrix(jnp.asarray(X)))
 
 

@@ -140,11 +140,11 @@ def apply_merge(plan: MergePlan, stacked_tree):
     return jax.tree_util.tree_map(_mix, stacked_tree)
 
 
-@functools.partial(jax.jit, donate_argnums=(1,))
-def _mix_tree_device(W: jnp.ndarray, stacked_tree):
-    """out[k] = sum_j W[k, j] * in[j] on every leaf, f32 contraction on
-    device. The stacked tree is donated: XLA reuses its buffers for the
-    output, so merging K full client states is in-place in HBM."""
+def mix_stacked_tree(W: jnp.ndarray, stacked_tree):
+    """out[k] = sum_j W[k, j] * in[j] on every leaf, f32 contraction.
+    Plain traceable function — THE merge-mix numerical contract, shared by
+    the jitted ``apply_merge_device`` wrapper and the engine's fused merge
+    step (the parity tests depend on both using this exact op)."""
     def _mix(leaf):
         mixed = jnp.tensordot(W, leaf.astype(jnp.float32), axes=1)
         return mixed.astype(leaf.dtype)
@@ -152,11 +152,101 @@ def _mix_tree_device(W: jnp.ndarray, stacked_tree):
     return jax.tree_util.tree_map(_mix, stacked_tree)
 
 
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _mix_tree_device(W: jnp.ndarray, stacked_tree):
+    """Jitted ``mix_stacked_tree``: the stacked tree is donated, so XLA
+    reuses its buffers for the output — merging K full client states is
+    in-place in HBM."""
+    return mix_stacked_tree(W, stacked_tree)
+
+
 def apply_merge_device(plan: MergePlan, stacked_tree):
     """Device-resident ``apply_merge``: one jitted W @ leaf einsum per leaf
     with donated buffers. Merges local models and control variates through
     the same path; the caller's tree is consumed (donated)."""
     return _mix_tree_device(jnp.asarray(plan.W), stacked_tree)
+
+
+def device_merge_plan(
+    corr: jnp.ndarray,
+    active: jnp.ndarray,
+    weights: jnp.ndarray,
+    threshold: float = 0.7,
+    max_group_size: int = 3,
+    alpha: str = "uniform",
+):
+    """On-device transcription of ``merge_clients`` + ``plan_from_groups``:
+    (K, K) similarity -> fixed-shape merge matrices, entirely in jnp so the
+    compiled round engine can plan a merge without a host round-trip.
+
+    Returns ``(W, A, active_new)``: ``W`` is the alpha-weighted merge
+    matrix (row-stochastic on representatives, identity on unmerged, zero
+    on retired — exactly ``MergePlan.W``), ``A`` the 0/1 group-assignment
+    matrix (``A[i, j] = 1`` iff j is in the group represented by i), and
+    ``active_new`` the post-merge active mask. The greedy loop is a
+    bounded ``fori_loop`` over the K candidate representatives in index
+    order, replicating the host algorithm's semantics member for member
+    (first ``max_group_size - 1`` qualifying partners in ascending index
+    order; nodes already absorbed are skipped; previously-unmerged rows
+    are never revoked). Property-tested against the host planner in
+    tests/test_engine.py."""
+    K = corr.shape[0]
+    act = jnp.asarray(active, jnp.float32) > 0
+    w_f32 = jnp.asarray(weights, jnp.float32)
+    thr = jnp.float32(threshold)
+    idx = jnp.arange(K)
+
+    def body(i, st):
+        W, A, act_new, used = st
+        onehot = (idx == i).astype(jnp.float32)
+        avail = jnp.logical_and(jnp.logical_not(used[i]), act[i])
+        qualify = (corr[i] >= thr) & jnp.logical_not(used) & act & (idx != i)
+        rank = jnp.cumsum(qualify.astype(jnp.int32))
+        take = qualify & (rank <= max_group_size - 1)
+        has_group = jnp.any(take)
+        member = jnp.logical_or(take, idx == i).astype(jnp.float32)
+        if alpha == "data":
+            wrow = member * w_f32
+            wrow = wrow / jnp.maximum(jnp.sum(wrow), 1e-12)
+        else:
+            wrow = member / jnp.maximum(jnp.sum(member), 1.0)
+        row_w = jnp.where(has_group, wrow, onehot)
+        row_a = jnp.where(has_group, member, onehot)
+        W = W.at[i].set(jnp.where(avail, row_w, W[i]))
+        A = A.at[i].set(jnp.where(avail, row_a, A[i]))
+        act_new = act_new.at[i].set(jnp.where(avail, 1.0, act_new[i]))
+        used = jnp.where(avail & has_group, used | (member > 0), used)
+        return W, A, act_new, used
+
+    init = (
+        jnp.zeros((K, K), jnp.float32),
+        jnp.zeros((K, K), jnp.float32),
+        jnp.zeros((K,), jnp.float32),
+        jnp.zeros((K,), bool),
+    )
+    W, A, act_new, _ = jax.lax.fori_loop(0, K, body, init)
+    return W, A, act_new
+
+
+def groups_from_assignment(A, active_new) -> Tuple[List[List[int]], List[int]]:
+    """Decode ``device_merge_plan``'s assignment matrix back into the host
+    ``(groups, unmerged)`` representation (same ordering as
+    ``merge_clients``: representative first, members ascending), so the
+    engine's host shell can reuse ``plan_from_groups`` for the shard /
+    weight bookkeeping."""
+    A = np.asarray(A)
+    act = np.asarray(active_new) > 0
+    groups: List[List[int]] = []
+    unmerged: List[int] = []
+    for i in range(A.shape[0]):
+        if not act[i]:
+            continue
+        members = np.flatnonzero(A[i] > 0.5)
+        if len(members) > 1:
+            groups.append([int(i)] + [int(j) for j in members if j != i])
+        else:
+            unmerged.append(int(i))
+    return groups, unmerged
 
 
 def merged_data_sizes(plan: MergePlan, data_sizes: Sequence[int]) -> np.ndarray:

@@ -16,6 +16,7 @@ oracle pipeline for tests and benchmarks.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Optional, Sequence
 
 import jax
@@ -130,6 +131,55 @@ def _accumulate_chunk(gram, sums, chunk):
     return gram, sums + jnp.sum(x, axis=1)
 
 
+# fused-scan path: chunk width of the packed column buffer. One scan step
+# per PEARSON_SCAN_CHUNK columns keeps the XLA loop body a single
+# fixed-shape dot — fewer dispatches than the per-leaf Python loop when
+# the tree has many leaves (transformers: 100s).
+PEARSON_SCAN_CHUNK = 16384
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def _pearson_scan_packed(views, eps: float = 1e-8):
+    """Single jitted ``lax.scan`` (gram, sums) accumulation over packed
+    leaf chunks: the (already subsampled / cast) per-leaf views are packed
+    column-wise, zero-padded to a chunk multiple (padding cancels — the
+    finalization divides by the true column count), and streamed through
+    one scan. ONE dispatch for the whole tree instead of one per leaf; the
+    trade is one packed (K, M') copy inside the program, so the per-leaf
+    loop remains the default for the pod-sharded at-scale path where
+    (K, M) must never materialize."""
+    from repro.kernels.pearson.ops import finalize_pearson
+
+    views = list(views)
+    K = int(views[0].shape[0])
+    n_cols = int(sum(v.shape[1] for v in views))
+    chunk = min(PEARSON_SCAN_CHUNK, n_cols)
+    packed = jnp.concatenate(views, axis=1)
+    pad = (-n_cols) % chunk
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad)))
+    n_chunks = packed.shape[1] // chunk
+
+    def body(carry, i):
+        gram, sums = carry
+        # slice the chunk in place (no transposed rechunk copy)
+        x = jax.lax.dynamic_slice_in_dim(
+            packed, i * chunk, chunk, axis=1
+        ).astype(jnp.float32)
+        gram = gram + jax.lax.dot_general(
+            x, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return (gram, sums + jnp.sum(x, axis=1)), None
+
+    (gram, sums), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((K, K), jnp.float32), jnp.zeros((K,), jnp.float32)),
+        jnp.arange(n_chunks),
+    )
+    return finalize_pearson(gram, sums, n_cols, eps=eps)
+
+
 def pearson_tree(
     stacked_params,
     exclude_constant: bool = False,
@@ -138,6 +188,7 @@ def pearson_tree(
     compute_dtype=None,
     use_kernel: bool = False,
     interpret: bool = True,
+    fused: bool = False,
     eps: float = 1e-8,
 ) -> jnp.ndarray:
     """Streaming tree-Pearson: stacked (K, ...) pytree -> (K, K) correlation
@@ -148,20 +199,29 @@ def pearson_tree(
     accumulators stay f32), and folded into a running (gram, sums) pair —
     through the Pallas kernel when ``use_kernel`` (each chunk padded
     independently, at most one block of waste per leaf) or a jnp dot
-    otherwise. Finalization divides by the true column count, shared with
-    the kernel wrapper in kernels/pearson/ops.py.
+    otherwise. ``fused=True`` replaces the per-leaf Python loop with ONE
+    ``lax.scan`` over packed fixed-width column chunks (fewer dispatches
+    at many leaves / large K; accumulation order changes, so results
+    differ from the loop at f32 rounding level — benchmarked in
+    benchmarks/merge_pipeline.py, not used where bit-parity with the
+    per-leaf oracle is asserted). Finalization divides by the true column
+    count, shared with the kernel wrapper in kernels/pearson/ops.py.
     """
     from repro.kernels.pearson.ops import finalize_pearson, pearson_chunk
 
+    if fused and use_kernel:
+        raise ValueError(
+            "pearson_tree: fused=True is the jnp packed-scan path and "
+            "cannot be combined with use_kernel=True (the Pallas kernel "
+            "does its own per-chunk tiling); pick one"
+        )
     views = _leaf_views(stacked_params, exclude_constant)
     if not views:
         raise ValueError("pearson_tree: no leaves to correlate")
     K = int(views[0].shape[0])
     picked = sample_leaf_columns([v.shape[1] for v in views], sample, seed)
 
-    gram = jnp.zeros((K, K), jnp.float32)
-    sums = jnp.zeros((K,), jnp.float32)
-    n_cols = 0
+    kept = []
     for i, v in enumerate(views):
         if picked is not None:
             if picked[i].size == 0:
@@ -171,6 +231,17 @@ def pearson_tree(
             continue  # zero-width leaf: nothing to accumulate
         if compute_dtype is not None:
             v = v.astype(compute_dtype)
+        kept.append(v)
+    if not kept:
+        raise ValueError("pearson_tree: no columns left to correlate")
+
+    if fused:
+        return _pearson_scan_packed(kept, eps=eps)
+
+    gram = jnp.zeros((K, K), jnp.float32)
+    sums = jnp.zeros((K,), jnp.float32)
+    n_cols = 0
+    for v in kept:
         n_cols += int(v.shape[1])
         if use_kernel:
             g, s = pearson_chunk(v, interpret=interpret)
@@ -185,6 +256,7 @@ def pearson_round_program(
     sample: int = 0,
     seed: int = 0,
     compute_dtype=None,
+    fused: bool = False,
 ):
     """The round-level correlation program as ONE jit-able function over a
     stacked (K, ...) client pytree — the streaming ``pearson_tree`` path,
@@ -202,6 +274,7 @@ def pearson_round_program(
             sample=sample,
             seed=seed,
             compute_dtype=compute_dtype,
+            fused=fused,
         )
 
     return program

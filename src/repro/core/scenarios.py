@@ -20,7 +20,11 @@ Register your own with ``@SCENARIOS.register("name")``.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 from typing import Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.federation import Scenario
 from repro.data.attacks import DataAttack
@@ -33,6 +37,59 @@ SCENARIOS: Registry[Scenario] = Registry("scenario")
 def build_scenario(name: str, num_clients: int, seed: int = 0, **kw) -> Scenario:
     """Look up + build: the one entry point launchers/benchmarks use."""
     return SCENARIOS.get(name)(num_clients, seed, **kw)
+
+
+@dataclass(frozen=True)
+class RoundTables:
+    """A scenario's randomness, pre-drawn for every round as stacked
+    (T, ...) arrays so the compiled round engine can consume it inside a
+    ``lax.scan`` without per-round host draws. Built from the same seeded
+    ``PacketLoss.schedule`` / ``NetworkDelay.schedule`` draws the
+    per-round simulator uses, so both pipelines see identical faults."""
+
+    steps_mask: np.ndarray   # (T, K, S) f32 — packet-loss epoch truncation
+    round_mask: np.ndarray   # (T, K)    f32 — dropped / delayed this round
+    delay: np.ndarray        # (T, K)  int32 — staleness in rounds (0 = none)
+    poison: np.ndarray       # (K,)      f32 — model-poison delta factor
+
+
+def round_tables(scenario: Scenario, num_clients: int, num_rounds: int,
+                 steps_per_epoch: int, local_steps: int,
+                 loss_sched=None, delay_sched=None) -> RoundTables:
+    """Pre-draw a scenario's per-round fault randomness as stacked device-
+    ready tables (the engine's counterpart of
+    ``FederatedSimulator._round_masks``, vectorized over rounds).
+
+    ``loss_sched``/``delay_sched`` accept already-drawn (T, K) schedules —
+    the engine passes the simulator's own arrays so both pipelines consume
+    the SAME draws by construction, even for a user-registered fault whose
+    ``schedule()`` is stateful."""
+    T, K, S = num_rounds, num_clients, local_steps
+    steps_mask = np.ones((T, K, S), np.float32)
+    round_mask = np.ones((T, K), np.float32)
+    pl = scenario.packet_loss
+    if pl is not None:
+        hit = np.asarray(
+            pl.schedule(K, T) if loss_sched is None else loss_sched, bool
+        )
+        if pl.drop_update:
+            round_mask[hit] = 0.0
+        else:
+            # paper §V: hit clients only complete the first local epoch
+            steps_mask[:, :, steps_per_epoch:] *= ~hit[:, :, None]
+    if scenario.network_delay is not None:
+        delay = np.asarray(
+            scenario.network_delay.schedule(K, T)
+            if delay_sched is None else delay_sched, np.int32
+        )
+    else:
+        delay = np.zeros((T, K), np.int32)
+    round_mask[delay > 0] = 0.0  # delayed deltas are excluded now, arrive late
+    poison = np.ones(K, np.float32)
+    for cid, factor in scenario.model_poison.items():
+        poison[cid] = factor
+    return RoundTables(steps_mask=steps_mask, round_mask=round_mask,
+                       delay=delay, poison=poison)
 
 
 def _poison_ids(num_clients: int, poison_frac: float,

@@ -165,7 +165,7 @@ def validate_spec(spec: ExperimentSpec) -> None:
         ("algo", spec.algo, ALGORITHMS),
         ("aggregator", spec.aggregator, AGGREGATORS),
         ("alpha", spec.alpha, ALPHAS),
-        ("pipeline", spec.pipeline, ("device", "host")),
+        ("pipeline", spec.pipeline, ("device", "host", "engine")),
     ):
         if value not in allowed:
             raise ValueError(

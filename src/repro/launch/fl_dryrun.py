@@ -119,6 +119,65 @@ def lower_fl_round(arch: str, K: int, seq: int = 512, batch_per_client: int = 16
         }
 
 
+def lower_engine_segment(arch: str, K: int, rounds: int = 4, seq: int = 512,
+                         batch_per_client: int = 16, mesh=None,
+                         reduced: bool = False):
+    """The compiled round engine's segment program at pod scale: ``rounds``
+    SCAFFOLD rounds under ONE ``lax.scan`` (stacked per-round batches as
+    scan inputs), lowered with the same pod/data/model shardings as the
+    per-round ``fl_round`` program. One dispatch per segment instead of
+    one per round — the collectives scale linearly with the segment length
+    while the launch overhead amortizes (the engine's claim; the in-sim
+    rounds/sec measurement lives in benchmarks/engine_rounds.py)."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=True)
+    fl_round = make_fl_round(cfg)
+
+    def engine_segment(x_g, c_g, c_locals, batches_T, weights):
+        def step(carry, b):
+            x, cg, cl = carry
+            x, cg, cl = fl_round(x, cg, cl, b, weights)
+            return (x, cg, cl), ()
+
+        (x_g, c_g, c_locals), _ = jax.lax.scan(
+            step, (x_g, c_g, c_locals), batches_T
+        )
+        return x_g, c_g, c_locals
+
+    with mesh:
+        params = ST.param_structs(cfg)
+        pspecs = SH.param_specs(cfg, params, mesh)
+        psh = SH.to_shardings(mesh, pspecs)
+        csh = SH.to_shardings(mesh, SH.client_specs(pspecs))
+        c_locals = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), params
+        )
+        batches = {
+            "tokens": jax.ShapeDtypeStruct(
+                (rounds, K, batch_per_client, seq), jnp.int32
+            )
+        }
+        bsh = {"tokens": NamedSharding(mesh, P(None, "pod", "data", None))}
+        weights = jax.ShapeDtypeStruct((K,), jnp.float32)
+        fn = jax.jit(
+            engine_segment,
+            in_shardings=(psh, psh, csh, bsh, NamedSharding(mesh, P())),
+            out_shardings=(psh, psh, csh),
+        )
+        compiled = fn.lower(params, params, c_locals, batches, weights).compile()
+        # the collectives live inside the scan body: the static HLO bytes
+        # ARE the per-round cost (executed `rounds` times by one dispatch)
+        coll = collective_bytes(compiled.as_text())
+        return {
+            "program": "engine_segment", "arch": arch, "K": K,
+            "rounds": rounds, "dispatches": 1, "collectives": coll,
+            "collective_bytes_per_round": sum(coll.values()),
+            "peak_bytes": _peak_bytes(compiled.memory_analysis()),
+        }
+
+
 def lower_pearson_round(arch: str, K: int, mesh=None, reduced: bool = False):
     """The streaming ``pearson_tree`` round program with K sharded over
     'pod' and every leaf's feature dims over data x model (the same param
@@ -164,6 +223,11 @@ def main():
     ap.add_argument("--spec", default=None,
                     help="ExperimentSpec JSON: baseline K = spec.num_clients "
                          "(post-merge K = half), mesh = spec.mesh")
+    ap.add_argument("--engine", action="store_true",
+                    help="also lower the compiled round engine's "
+                         "scan-over-rounds segment program at baseline K")
+    ap.add_argument("--engine-rounds", type=int, default=4,
+                    help="rounds per engine segment lowering")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     k_base = 8
@@ -201,6 +265,19 @@ def main():
         print(f"pearson      K={K}: coll_bytes/dev={r2['collective_bytes']:.3e} "
               f"{r2['collectives']}", flush=True)
         recs += [r1, r2]
+    if args.engine:
+        K = pod_multiple(k_base)
+        r3 = lower_engine_segment(
+            args.arch, K, rounds=args.engine_rounds,
+            seq=64 if args.smoke else 512,
+            batch_per_client=4 if args.smoke else 16,
+            mesh=mesh, reduced=args.smoke,
+        )
+        r3["stage"] = "baseline"
+        print(f"engine_seg   K={K} R={r3['rounds']} (1 dispatch): "
+              f"coll_bytes/dev/round={r3['collective_bytes_per_round']:.3e}",
+              flush=True)
+        recs.append(r3)
     out = os.path.join(args.out, f"fl_round__{args.arch}{tag_suffix}.json")
     with open(out, "w") as f:
         json.dump(recs, f, indent=2)

@@ -90,9 +90,10 @@ def main():
     ap.add_argument("--local-epochs", type=int, default=2)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--pipeline", default="device",
-                    choices=["device", "host"],
-                    help="merge pipeline: zero-copy streaming (device) or "
-                         "the numpy oracle (host)")
+                    choices=["device", "host", "engine"],
+                    help="round pipeline: zero-copy streaming per-round "
+                         "(device), the numpy oracle (host), or the "
+                         "compiled scan-over-rounds engine (engine)")
     ap.add_argument("--mesh", default="none",
                     choices=["none"] + MESHES.names(),
                     help="named mesh for the pod-sharded mode (default: none)")

@@ -77,6 +77,26 @@ def test_pod2_sharded_sim_subprocess():
         total = sum(len(y) for _, y in shards)
         assert int(sim._shard_x.shape[0]) == total
         assert hist[-1].accuracy > 0.85, hist[-1]
+
+        # the compiled round engine drives the SAME pod=2 mesh through its
+        # scan segments and fused merge step, and reproduces the per-round
+        # device pipeline's trajectory
+        fl_e = FLConfig(algo=AlgoConfig(algorithm="scaffold", lr_local=0.1),
+                        num_rounds=6, local_epochs=2, steps_per_epoch=5,
+                        batch_size=16, merge_round=2, threshold=0.3, seed=0,
+                        pipeline="engine")
+        sim_e = FederatedSimulator(init, loss, acc, shards, fl_e,
+                                   mesh=make_fl_mesh(pods=2))
+        assert len(sim_e.c_locals["w"].sharding.device_set) == 2
+        hist_e = sim_e.run()
+        assert [r.merged_groups for r in hist_e] == \
+            [r.merged_groups for r in hist]
+        assert [r.updates_sent for r in hist_e] == \
+            [r.updates_sent for r in hist]
+        np.testing.assert_allclose([r.accuracy for r in hist_e],
+                                   [r.accuracy for r in hist], atol=1e-6)
+        # carried client state keeps the pod sharding through the scan
+        assert len(sim_e.c_locals["w"].sharding.device_set) == 2
         print("POD_SHARD_OK", hist[-1].accuracy)
     """)
     res = subprocess.run(
