@@ -7,9 +7,11 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.launch.evalharness import RunCache, cell_runs, compare_cells, paired_ci
 from repro.launch.experiment import ExperimentSpec, run_experiment
 
 K = 8
+CI_SEEDS = (0, 1, 2)
 
 
 def _spec(threshold=0.6, merge_at=(2,), max_group=3, alpha="uniform",
@@ -77,12 +79,27 @@ def run():
             acc, nodes = _run_once(algo=algo, merge=merge)
             print(f"  {algo:9s} merge={str(merge):5s}: acc={acc:.4f} "
                   f"active_nodes={nodes}")
-    print("merging vs robust aggregation (paper §III baselines, poisoning):")
+    print("merging vs robust aggregation (paper §III baselines, poisoning;")
+    print(f"  paired over seeds {list(CI_SEEDS)} — evalharness 95% t-CIs):")
+    cache = RunCache()
     for agg in ("mean", "median", "trimmed", "krum"):
         for merge in (True, False):
-            acc, nodes = _run_once(aggregator=agg, merge=merge)
-            print(f"  agg={agg:8s} merge={str(merge):5s}: acc={acc:.4f} "
+            runs = cell_runs(cache, _spec(aggregator=agg, merge=merge),
+                             CI_SEEDS)
+            accs = [r.mean_accuracy_tail for r in runs]
+            mean, lo, hi = paired_ci(accs)
+            nodes = runs[0].active_nodes_end
+            print(f"  agg={agg:8s} merge={str(merge):5s}: "
+                  f"acc={mean:.4f} ci=[{lo:.4f},{hi:.4f}] "
                   f"active_nodes={nodes}")
+        # the ablation's actual question, answered as a paired difference:
+        # does merging help or hurt THIS aggregator under poisoning?
+        d = compare_cells(cache, _spec(aggregator=agg, merge=True),
+                          _spec(aggregator=agg, merge=False), CI_SEEDS,
+                          metric="mean_accuracy_tail")
+        sig = " *" if d.significant else ""
+        print(f"  agg={agg:8s} merge-minus-none: {d.mean:+.4f} "
+              f"ci=[{d.ci_lo:+.4f},{d.ci_hi:+.4f}]{sig}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,378 @@
+"""Adaptive adversary engine (DESIGN.md §8).
+
+The static attacks the repo shipped so far — label flips fixed at shard
+construction (``data/attacks.DataAttack``) and sign-flip coefficients
+drawn before round 0 (``Scenario.model_poison``) — cannot express the
+obvious counterattack on a similarity-keyed merge rule: a Byzantine
+client that *adapts* to round state. An :class:`Adversary` is hooked into
+the round loop AFTER local training and BEFORE similarity/aggregation
+(the split round in ``core/scaffold.py``): it observes exactly what its
+threat-model tier permits and emits crafted per-client uploads that
+replace the attackers' trained deltas — including the local model the
+merge policy correlates over.
+
+Threat-model tiers (what ``craft`` may read from the context):
+
+  blackbox — round index, global params, the attackers' own deltas
+  graybox  — + the stacked honest deltas (an omniscient-network attacker)
+  whitebox — + the similarity matrix as the active merge policy computes
+             it (``needs_similarity=True``)
+
+Shipped adversaries (registered in ``ADVERSARIES``; scenario factories in
+``core/scenarios.py`` wire them into the registry/spec machinery):
+
+  pearson_mimic       — whitebox, stateless. Mimics the most-central
+                        honest client's update and rides an orthogonal
+                        poison component into its merge group: the
+                        attacker's Pearson row clears ``threshold``, the
+                        poison detonates through the post-merge W-mix.
+  colluding_sign_flip — graybox, stateless. f attackers coordinate ONE
+                        anti-update direction and split the magnitude
+                        f ways, so each individual upload is small enough
+                        to slip under trimmed/krum-style filters while
+                        the sum retains full strength (and the identical
+                        uploads form a tight cluster krum may select).
+  adaptive_scale      — graybox, STATEFUL. Binary-searches the largest
+                        poison scale the active aggregator accepts by
+                        measuring, each round, how far the global model
+                        actually moved along last round's poison
+                        direction. Fixed-shape jnp state, so it runs
+                        inside the compiled engine's ``lax.scan``.
+  label_drift         — environment shift rather than a crafted upload:
+                        a host-side schedule that permutes honest
+                        clients' label semantics mid-run (concept
+                        drift). Not jittable — the engine pipeline takes
+                        the documented per-round host fallback.
+
+``craft(ctx, state)`` must be jax-traceable for ``jittable=True``
+adversaries (the engine calls it inside a scan with ``state`` in the
+carry); the per-round pipelines call it eagerly either way, so
+host-stateful adversaries only need numpy-compatible ops.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.registry import Registry
+
+ADVERSARIES: Registry["Adversary"] = Registry("adversary")
+
+
+# ---------------------------------------------------------------------------
+# stacked-pytree <-> (K, M) helpers
+# ---------------------------------------------------------------------------
+
+def flatten_stacked(tree) -> jnp.ndarray:
+    """Stacked (K, ...) pytree -> (K, M) f32 matrix (client-major)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    K = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+
+
+def flatten_params(tree) -> jnp.ndarray:
+    """Unstacked pytree -> (M,) f32 vector (same leaf order as above)."""
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(tree)]
+    )
+
+
+def unflatten_like(mat: jnp.ndarray, tree):
+    """(K, M) matrix -> stacked pytree with ``tree``'s structure/dtypes."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, i = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+        out.append(mat[:, i:i + n].reshape(l.shape).astype(l.dtype))
+        i += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_context(t, x_g, dx, x_locals, active, part, weights,
+                 threshold: float, lr_global: float,
+                 corr=None) -> Dict:
+    """The round state an adversary observes, as a plain dict pytree so it
+    traces through jit unchanged. ``corr`` is only populated for
+    ``needs_similarity`` adversaries (whitebox tier)."""
+    return {
+        "t": t, "x_g": x_g, "dx": dx, "x_locals": x_locals,
+        "active": active, "part": part, "weights": weights,
+        "threshold": jnp.float32(threshold),
+        "lr_global": jnp.float32(lr_global),
+        "corr": corr,
+    }
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+class Adversary:
+    """Base protocol. Subclasses set the class attributes and implement
+    ``craft`` (upload-rewriting adversaries) and/or ``pre_round``
+    (host-side data mutation, e.g. concept drift)."""
+
+    name = "adversary"
+    tier = "blackbox"            # blackbox | graybox | whitebox
+    jittable = True              # craft/state can run inside the engine scan
+    needs_similarity = False     # whitebox: ctx["corr"] is populated
+    crafts = True                # False: data-only adversary (no craft hook)
+
+    def __init__(self, client_ids: Sequence[int]):
+        self.client_ids: Tuple[int, ...] = tuple(
+            sorted(int(c) for c in client_ids)
+        )
+
+    def mask(self, K: int) -> np.ndarray:
+        """(K,) f32 attacker-controlled mask."""
+        m = np.zeros(K, np.float32)
+        m[list(self.client_ids)] = 1.0
+        return m
+
+    # -- hooks -------------------------------------------------------------
+    def init_state(self, params, K: int):
+        """Fixed-shape carried state (empty tuple = stateless)."""
+        return ()
+
+    def craft(self, ctx: Dict, state):
+        """(crafted stacked deltas matching ctx['dx'], new state). Only
+        attacker rows of the crafted tree are ever read."""
+        raise NotImplementedError
+
+    def pre_round(self, t: int, shards, seed: int) -> Optional[List]:
+        """Host hook before round ``t`` trains: return mutated shards (a
+        new list) to apply an environment shift, or None for no change."""
+        return None
+
+
+def _honest_stats(ctx, att):
+    """(honest mask, honest count, honest mean delta (M,), (K, M) deltas)."""
+    D = flatten_stacked(ctx["dx"])
+    h = ctx["active"] * (1.0 - att)
+    hn = jnp.maximum(jnp.sum(h), 1.0)
+    mean_h = jnp.sum(D * h[:, None], axis=0) / hn
+    return h, hn, mean_h, D
+
+
+# ---------------------------------------------------------------------------
+# shipped adversaries
+# ---------------------------------------------------------------------------
+
+@ADVERSARIES.register("pearson_mimic")
+class PearsonMimic(Adversary):
+    """Infiltrate a merge group by mimicry, then detonate post-merge.
+
+    The attacker observes the honest deltas and the policy's similarity
+    matrix (whitebox), picks the most-central honest client (the row with
+    the largest summed similarity to other honest clients — the client
+    most likely to seed a merge group), and uploads
+
+        d = u_target + gamma * ||u_target|| * p_orth
+
+    where ``u_target`` is the target's own update (the mimic component
+    that drags the attacker's Pearson row toward the target's) and
+    ``p_orth`` is the anti-update poison direction (−mean honest delta)
+    orthogonalized against ``u_target`` — mimicry and poison don't fight
+    over the same subspace. Because the shared global params dominate the
+    correlated vectors, the attacker's row clears ``threshold`` for
+    moderate ``gamma`` and the greedy planner groups it with the target.
+
+    Detonation: the planner makes ``group[0]`` — the lowest-id member —
+    the group's representative, so a low-id infiltrator HIJACKS the
+    intermediary-node role: the absorbed honest members are retired,
+    their data weight transfers to the attacker. The attacker detects
+    the completed merge in-scan (``sum(active) < K`` — the population
+    shrank) and switches from stealth mimicry to the full anti-update
+    ``-detonation * mean_h``, now speaking with the whole group's
+    weight against a thinned honest population. Under ``merge_policy=
+    'none'`` no merge ever happens and the attack stays in its (weak)
+    stealth mode — by design: this adversary is the counterattack ON
+    the merge rule."""
+
+    name = "pearson_mimic"
+    tier = "whitebox"
+    jittable = True
+    needs_similarity = True
+
+    def __init__(self, client_ids: Sequence[int], gamma: float = 2.0,
+                 detonation: float = 8.0, target: Optional[int] = None):
+        super().__init__(client_ids)
+        self.gamma = float(gamma)
+        self.detonation = float(detonation)
+        self.target = None if target is None else int(target)
+
+    def craft(self, ctx, state):
+        K = int(ctx["active"].shape[0])
+        att = jnp.asarray(self.mask(K))
+        h, _hn, mean_h, D = _honest_stats(ctx, att)
+        if self.target is not None:
+            tgt = jnp.asarray(self.target, jnp.int32)
+        else:
+            # most-central honest client under the policy's own similarity
+            score = jnp.sum(ctx["corr"] * h[None, :], axis=1) * h
+            tgt = jnp.argmax(jnp.where(h > 0, score, -jnp.inf))
+        u = D[tgt]
+        p = -mean_h
+        uu = jnp.maximum(jnp.vdot(u, u), 1e-12)
+        p_o = p - (jnp.vdot(p, u) / uu) * u
+        p_hat = p_o / jnp.maximum(jnp.linalg.norm(p_o), 1e-12)
+        mimic = u + self.gamma * jnp.linalg.norm(u) * p_hat
+        # a merge has happened once the active population shrank: stop
+        # hiding, detonate the hijacked group's full weight
+        detonated = jnp.sum(ctx["active"]) < K
+        d = jnp.where(detonated, -self.detonation * mean_h, mimic)
+        crafted = jnp.broadcast_to(d[None, :], D.shape)
+        return unflatten_like(crafted, ctx["dx"]), state
+
+
+@ADVERSARIES.register("colluding_sign_flip")
+class ColludingSignFlip(Adversary):
+    """f colluders coordinate one poison direction and split magnitude.
+
+    Every attacker uploads the SAME vector ``-(scale / f) * mean honest
+    delta``: the collective push equals a single ``scale``-strength
+    sign-flip, but each individual upload is f times smaller — small
+    enough to sit inside the trimmed mean's kept window — and the f
+    identical uploads form a zero-diameter cluster that krum's
+    nearest-neighbour score rewards."""
+
+    name = "colluding_sign_flip"
+    tier = "graybox"
+    jittable = True
+
+    def __init__(self, client_ids: Sequence[int], scale: float = 8.0):
+        super().__init__(client_ids)
+        self.scale = float(scale)
+
+    def craft(self, ctx, state):
+        att = jnp.asarray(self.mask(int(ctx["active"].shape[0])))
+        _h, _hn, mean_h, D = _honest_stats(ctx, att)
+        f = max(len(self.client_ids), 1)
+        d = -(self.scale / f) * mean_h
+        crafted = jnp.broadcast_to(d[None, :], D.shape)
+        return unflatten_like(crafted, ctx["dx"]), state
+
+
+@ADVERSARIES.register("adaptive_scale")
+class AdaptiveScale(Adversary):
+    """Binary-search the largest poison scale the aggregator accepts.
+
+    Each round the attackers upload ``scale * ||mean honest delta|| *
+    p_hat`` (anti-update direction). One round later the attacker
+    measures the realized movement of the global params along that
+    direction and compares it with the movement a fully-accepted upload
+    would have produced (``lr_global *`` the attackers' weight share
+    ``* scale * ||mean||``): acceptance raises ``lo``, rejection lowers
+    ``hi``, the next probe is the midpoint. Against ``mean`` the search
+    climbs to ``hi``; against median/trimmed the oversized probes are
+    filtered, the measured gain collapses, and the search converges onto
+    the filter's acceptance boundary — the strongest attack the
+    aggregator lets through.
+
+    State is a dict of fixed-shape f32 arrays (two model-sized vectors +
+    scalars), so the whole search runs inside the engine's scan."""
+
+    name = "adaptive_scale"
+    tier = "graybox"
+    jittable = True
+
+    def __init__(self, client_ids: Sequence[int], hi: float = 64.0,
+                 accept_frac: float = 0.25):
+        super().__init__(client_ids)
+        self.hi = float(hi)
+        self.accept_frac = float(accept_frac)
+
+    def init_state(self, params, K: int):
+        M = int(flatten_params(params).shape[0])
+        return {
+            "lo": jnp.float32(0.0),
+            "hi": jnp.float32(self.hi),
+            "scale": jnp.float32(self.hi / 2.0),
+            "prev_x": jnp.zeros((M,), jnp.float32),
+            "prev_dir": jnp.zeros((M,), jnp.float32),
+            "expected": jnp.float32(0.0),
+            "armed": jnp.float32(0.0),
+        }
+
+    def craft(self, ctx, state):
+        att = jnp.asarray(self.mask(int(ctx["active"].shape[0])))
+        _h, _hn, mean_h, D = _honest_stats(ctx, att)
+        x_flat = flatten_params(ctx["x_g"])
+
+        # observe last round's outcome: did the global model move along
+        # our poison direction by at least accept_frac of full acceptance?
+        gain = jnp.vdot(x_flat - state["prev_x"], state["prev_dir"])
+        accepted = gain > self.accept_frac * state["expected"]
+        armed = state["armed"] > 0
+        lo = jnp.where(armed & accepted, state["scale"], state["lo"])
+        hi = jnp.where(armed & ~accepted, state["scale"], state["hi"])
+        scale = jnp.where(armed, 0.5 * (lo + hi), state["scale"])
+
+        ref = jnp.maximum(jnp.linalg.norm(mean_h), 1e-12)
+        p_hat = -mean_h / ref
+        d = scale * ref * p_hat
+        crafted = jnp.broadcast_to(d[None, :], D.shape)
+
+        w, part = ctx["weights"], ctx["part"]
+        share = jnp.sum(w * att * part) / jnp.maximum(
+            jnp.sum(w * part), 1e-9
+        )
+        new_state = {
+            "lo": lo, "hi": hi, "scale": scale,
+            "prev_x": x_flat, "prev_dir": p_hat,
+            "expected": ctx["lr_global"] * share * scale * ref,
+            "armed": jnp.float32(1.0),
+        }
+        return unflatten_like(crafted, ctx["dx"]), new_state
+
+
+@ADVERSARIES.register("label_drift")
+class LabelDrift(Adversary):
+    """Concept drift: permute affected clients' label semantics mid-run.
+
+    At each round in ``drift_at`` the named (honest) clients' shard labels
+    are remapped through a fresh seeded permutation — their data
+    distribution shifts under a population whose similarity structure was
+    learned pre-drift. No uploads are crafted (``crafts=False``); the
+    mutation is host-side shard surgery, so the engine pipeline takes the
+    documented per-round host fallback (DESIGN.md §8)."""
+
+    name = "label_drift"
+    tier = "blackbox"
+    jittable = False
+    crafts = False
+
+    def __init__(self, client_ids: Sequence[int], drift_at: Sequence[int] = (4,),
+                 num_classes: int = 10):
+        super().__init__(client_ids)
+        self.drift_at = tuple(sorted(int(t) for t in drift_at))
+        self.num_classes = int(num_classes)
+
+    def pre_round(self, t: int, shards, seed: int) -> Optional[List]:
+        if t not in self.drift_at:
+            return None
+        rng = np.random.default_rng(seed + 7_654_321 * (t + 1))
+        # a derangement-ish permutation: re-draw until something moves
+        perm = rng.permutation(self.num_classes)
+        while self.num_classes > 1 and np.all(
+            perm == np.arange(self.num_classes)
+        ):
+            perm = rng.permutation(self.num_classes)
+        out = list(shards)
+        for cid in self.client_ids:
+            x, y = out[cid]
+            if len(y):
+                out[cid] = (x, perm[np.asarray(y, np.int64)].astype(y.dtype))
+        return out
+
+
+def make_adversary(kind: str, client_ids: Sequence[int], **knobs) -> Adversary:
+    """Registry lookup + construction (scenario factories use this)."""
+    return ADVERSARIES.get(kind)(client_ids, **knobs)

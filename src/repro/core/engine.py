@@ -65,7 +65,8 @@ from repro.core.merging import (
     mix_stacked_tree,
     plan_from_groups,
 )
-from repro.core.scaffold import make_round_fn
+from repro.core.adversary import make_context
+from repro.core.scaffold import make_aggregate_fn, make_round_fn, make_train_fn
 from repro.core.scenarios import round_tables
 
 # empty ring-buffer slot sentinel: an arrival round that never comes
@@ -131,17 +132,36 @@ class RoundEngine:
         pol = sim.policy
         mesh = sim.mesh
 
+        # jittable crafting adversary (DESIGN.md §8): the round splits into
+        # train -> craft -> aggregate INSIDE the scan, with the adversary's
+        # fixed-shape state threaded through the carry. Non-jittable (and
+        # whitebox-without-device-similarity) adversaries never reach the
+        # engine — FederatedSimulator.run() drops them to the per-round
+        # pipeline first (engine_adversary_fallback).
+        adv = sim.adversary
+        if adv is not None and adv.crafts:
+            assert adv.jittable and (
+                not adv.needs_similarity
+                or callable(getattr(pol, "device_similarity", None))
+            ), "non-jittable adversary reached the engine (fallback missed)"
+            train_body = make_train_fn(sim.loss_fn, fl.algo)
+            agg_body = make_aggregate_fn(fl.algo, adversarial=True)
+            adv_mask = jnp.asarray(adv.mask(sim.K))
+        else:
+            adv = None
+
         batch_sh = None
         if mesh is not None:
             rep = NamedSharding(mesh, P())
             batch_sh = NamedSharding(mesh, P(SH.client_axis(mesh, sim.K)))
 
         def core(state, const, xrow):
-            """One fused round: gather -> train -> stale enqueue ->
-            stale arrivals. Exactly the per-round device pipeline's order
+            """One fused round: gather -> train [-> craft] -> stale enqueue
+            -> stale arrivals. Exactly the per-round device pipeline's order
             (merge, which commutes with the params-only arrival update,
             happens at the jitted merge step's tail instead)."""
-            params, c_g, c_l, weights, active, buf, buf_w, buf_arr, wptr = state
+            (params, c_g, c_l, weights, active, buf, buf_w, buf_arr, wptr,
+             adv_st) = state
             sx, sy, soff, slen, bkey, poison = const
             t = xrow["t"]
             key = jax.random.fold_in(bkey, t)
@@ -151,10 +171,32 @@ class RoundEngine:
                     batches, {"x": batch_sh, "y": batch_sh}
                 )
             x_old = params
-            params, c_g, c_l, x_locals, losses = round_body(
-                params, c_g, c_l, batches, xrow["steps_mask"], weights,
-                active, xrow["round_mask"], poison,
-            )
+            if adv is None:
+                params, c_g, c_l, x_locals, losses = round_body(
+                    params, c_g, c_l, batches, xrow["steps_mask"], weights,
+                    active, xrow["round_mask"], poison,
+                )
+            else:
+                # the split round, same ops as the fused body: the adversary
+                # observes the honestly-trained deltas (and, whitebox, the
+                # policy's own similarity program over them), crafts, and
+                # the aggregate half substitutes the attackers' uploads
+                trained = train_body(
+                    params, c_g, c_l, batches, xrow["steps_mask"]
+                )
+                corr = (
+                    pol.device_similarity(trained[3])
+                    if adv.needs_similarity else None
+                )
+                ctx = make_context(
+                    t, params, trained[0], trained[3], active,
+                    active * xrow["round_mask"], weights, thr, lr_g, corr,
+                )
+                adv_dx, adv_st = adv.craft(ctx, adv_st)
+                params, c_g, c_l, x_locals, losses = agg_body(
+                    params, c_g, c_l, trained, weights, active,
+                    xrow["round_mask"], poison, adv_dx, adv_mask,
+                )
             if has_delay:
                 # enqueue delayed senders' deltas with their send-time
                 # weight (fixed-capacity ring; rank-compacted slots, the
@@ -194,7 +236,7 @@ class RoundEngine:
                 )
                 buf_arr = jnp.where(arrived, _NEVER, buf_arr)
             state = (params, c_g, c_l, weights, active, buf, buf_w, buf_arr,
-                     wptr)
+                     wptr, adv_st)
             return state, x_locals, losses
 
         def segment(state, const, xs):
@@ -237,8 +279,11 @@ class RoundEngine:
             rep_tree = jax.tree_util.tree_map(lambda _: rep, sim.params)
             stacked_tree = SH.client_stack_shardings(mesh, sim.c_locals)
             buf_tree = jax.tree_util.tree_map(lambda _: rep, sim.params)
+            adv_sh = jax.tree_util.tree_map(
+                lambda _: rep, getattr(sim, "_adv_state", ())
+            )
             state_sh = (rep_tree, rep_tree, stacked_tree, rep, rep,
-                        buf_tree, rep, rep, rep)
+                        buf_tree, rep, rep, rep, adv_sh)
             seg = jax.jit(segment, donate_argnums=(0,),
                           out_shardings=(state_sh, (rep_tree, rep)))
             m_dev = jax.jit(merge_device, donate_argnums=(0,),
@@ -263,6 +308,7 @@ class RoundEngine:
             sim.params, sim.c_global, sim.c_locals,
             jnp.asarray(sim.weights), jnp.asarray(sim.active),
             buf, buf_w, buf_arr, jnp.asarray(0, jnp.int32),
+            getattr(sim, "_adv_state", ()),  # crafting adversary's carry
         )
         if sim.mesh is not None:
             rep = NamedSharding(sim.mesh, P())
@@ -271,6 +317,7 @@ class RoundEngine:
                 jax.device_put(state[3], rep), jax.device_put(state[4], rep),
                 jax.device_put(state[5], rep), jax.device_put(state[6], rep),
                 jax.device_put(state[7], rep), jax.device_put(state[8], rep),
+                jax.device_put(state[9], rep),
             )
         return state
 
@@ -409,4 +456,6 @@ class RoundEngine:
                 t = end
         # leave the simulator's device state current for checkpoints etc.
         sim.params, sim.c_global, sim.c_locals = state[0], state[1], state[2]
+        if sim.adversary is not None and sim.adversary.crafts:
+            sim._adv_state = state[9]
         return sim.history

@@ -27,7 +27,7 @@ while round t computes (FLConfig.overlap_gather).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -43,7 +43,13 @@ from repro.core.merging import (
     apply_merge_device,
     merged_data_sizes,
 )
-from repro.core.scaffold import AlgoConfig, init_controls, make_round_fn
+from repro.core.scaffold import (
+    AlgoConfig,
+    init_controls,
+    make_aggregate_fn,
+    make_round_fn,
+    make_train_fn,
+)
 from repro.data.attacks import DataAttack
 from repro.data.faults import NetworkDelay, PacketLoss
 from repro.utils.pytree import tree_bytes
@@ -195,6 +201,12 @@ class Scenario:
     # stale updates: a delayed client's delta is excluded from its round's
     # aggregation and applied (weighted) when it "arrives" d rounds later
     network_delay: Optional[NetworkDelay] = None
+    # adaptive adversary (core/adversary.Adversary): hooked into the round
+    # loop after local training and before similarity/aggregation — it
+    # observes round state per its threat-model tier and rewrites the
+    # attacker clients' uploads (and/or mutates shards pre-round, e.g.
+    # concept drift). None = static attacks only (the historical behavior).
+    adversary: Optional[object] = None
 
     def apply_data_attacks(self, shards, seed: int):
         """Return shards with every data attack applied. The first attack
@@ -307,6 +319,18 @@ class FederatedSimulator:
         self.weights = np.asarray([len(y) for _, y in self.shards], np.float32)
         self.merge_plan = None
         self.history: List[RoundRecord] = []
+
+        # adaptive adversary (DESIGN.md §8): crafting adversaries take the
+        # SPLIT round path — jitted train half, eager craft (so host-
+        # stateful adversaries work), jitted aggregate half. The fused
+        # round_fn above stays the adversary-free path, bit-for-bit.
+        self.adversary = self.scenario.adversary
+        self.engine_adversary_fallback: Optional[str] = None
+        if self.adversary is not None and self.adversary.crafts:
+            self._train_fn = jax.jit(make_train_fn(loss_fn, fl.algo))
+            self._agg_fn = jax.jit(make_aggregate_fn(fl.algo, adversarial=True))
+            self._adv_state = self.adversary.init_state(self.params, self.K)
+            self._adv_mask = jnp.asarray(self.adversary.mask(self.K))
 
         if self.scenario.packet_loss is not None:
             self._loss_sched = self.scenario.packet_loss.schedule(
@@ -531,23 +555,93 @@ class FederatedSimulator:
             wall_s=wall_s,
         )
 
+    def _adversarial_round(self, t: int, batches, steps_mask, round_mask,
+                           poison):
+        """The split round (DESIGN.md §8): jitted local training, then the
+        adversary observes the round state its tier permits and crafts the
+        attackers' uploads, then the jitted aggregate half substitutes
+        them (delta AND reported local model) and aggregates. Called
+        eagerly so host-stateful adversaries work in every per-round
+        pipeline; the compiled engine inlines the same three stages into
+        its scan for jittable adversaries."""
+        from repro.core.adversary import make_context
+
+        adv = self.adversary
+        trained = self._train_fn(
+            self.params, self.c_global, self.c_locals, batches,
+            jnp.asarray(steps_mask),
+        )
+        dx, _dc, _c_new, x_locals_t, _losses = trained
+        part = jnp.asarray(
+            (self.active * round_mask).astype(np.float32)
+        )
+        corr = None
+        if adv.needs_similarity:
+            # the similarity matrix as the ACTIVE policy computes it over
+            # the honestly-trained locals — the whitebox observation
+            corr = jnp.asarray(self.policy.similarity(x_locals_t))
+        ctx = make_context(
+            jnp.asarray(t, jnp.int32), self.params, dx, x_locals_t,
+            jnp.asarray(self.active), part, jnp.asarray(self.weights),
+            self.fl.threshold, self.fl.algo.lr_global, corr,
+        )
+        adv_dx, self._adv_state = adv.craft(ctx, self._adv_state)
+        return self._agg_fn(
+            self.params, self.c_global, self.c_locals, trained,
+            jnp.asarray(self.weights), jnp.asarray(self.active),
+            jnp.asarray(round_mask), jnp.asarray(poison),
+            adv_dx, self._adv_mask,
+        )
+
     def run(self, verbose: bool = False) -> List[RoundRecord]:
         if self.fl.pipeline == "engine":
-            from repro.core.engine import RoundEngine
-
-            # cache the compiled segment/merge programs on the simulator so
-            # repeated run() calls (and benchmark warm timings) skip the
-            # cold re-jit — mirrors the device pipeline jitting round_fn
-            # once in __init__
-            engine = RoundEngine(
-                self, programs=getattr(self, "_engine_programs", None)
+            adv = self.adversary
+            incompatible = adv is not None and (
+                not adv.jittable
+                or (adv.needs_similarity and not callable(
+                    getattr(self.policy, "device_similarity", None)))
             )
-            self._engine_programs = engine.programs
-            return engine.run(verbose=verbose)
+            if incompatible:
+                # DESIGN.md §8: host-stateful adversaries (and whitebox
+                # adversaries under a policy with no device similarity
+                # program) cannot run inside the compiled scan — the
+                # documented per-round host fallback drops this run to the
+                # per-round device pipeline. Recorded on the simulator so
+                # harnesses/tests can assert which engine actually ran.
+                self.engine_adversary_fallback = (
+                    f"adversary '{adv.name}' (jittable={adv.jittable}, "
+                    f"needs_similarity={adv.needs_similarity}) cannot run "
+                    f"in-scan; using the per-round device pipeline"
+                )
+                self.fl = dc_replace(self.fl, pipeline="device")
+            else:
+                from repro.core.engine import RoundEngine
+
+                # cache the compiled segment/merge programs on the
+                # simulator so repeated run() calls (and benchmark warm
+                # timings) skip the cold re-jit — mirrors the device
+                # pipeline jitting round_fn once in __init__
+                engine = RoundEngine(
+                    self, programs=getattr(self, "_engine_programs", None)
+                )
+                self._engine_programs = engine.programs
+                return engine.run(verbose=verbose)
         fl = self.fl
         self._prefetched = None
         for t in range(fl.num_rounds):
             t0 = time.time()
+            if self.adversary is not None:
+                drifted = self.adversary.pre_round(t, self.shards, fl.seed)
+                if drifted is not None:
+                    # environment shift (e.g. label_drift): shards changed
+                    # under us — refresh the device buffers and drop any
+                    # batch prefetched against the stale rows
+                    self.shards = [
+                        (np.asarray(x), np.asarray(y)) for x, y in drifted
+                    ]
+                    if fl.pipeline == "device":
+                        self._upload_shards()
+                    self._prefetched = None
             if self._prefetched is not None and self._prefetched[0] == t:
                 batches = self._prefetched[1]
             else:
@@ -564,23 +658,34 @@ class FederatedSimulator:
                 x_before = jax.tree_util.tree_map(
                     lambda a: jnp.array(a, copy=True), self.params
                 )
-            (
-                self.params,
-                self.c_global,
-                self.c_locals,
-                x_locals,
-                losses,
-            ) = self.round_fn(
-                self.params,
-                self.c_global,
-                self.c_locals,
-                batches,
-                jnp.asarray(steps_mask),
-                jnp.asarray(self.weights),
-                jnp.asarray(self.active),
-                jnp.asarray(round_mask),
-                jnp.asarray(poison),
-            )
+            if self.adversary is not None and self.adversary.crafts:
+                (
+                    self.params,
+                    self.c_global,
+                    self.c_locals,
+                    x_locals,
+                    losses,
+                ) = self._adversarial_round(
+                    t, batches, steps_mask, round_mask, poison
+                )
+            else:
+                (
+                    self.params,
+                    self.c_global,
+                    self.c_locals,
+                    x_locals,
+                    losses,
+                ) = self.round_fn(
+                    self.params,
+                    self.c_global,
+                    self.c_locals,
+                    batches,
+                    jnp.asarray(steps_mask),
+                    jnp.asarray(self.weights),
+                    jnp.asarray(self.active),
+                    jnp.asarray(round_mask),
+                    jnp.asarray(poison),
+                )
             will_merge = fl.merge_enabled and t in fl.merge_at
             overlap = fl.pipeline == "device" and fl.overlap_gather
             if overlap and not will_merge and t + 1 < fl.num_rounds:

@@ -7,11 +7,19 @@ All operate on stacked client deltas (K, ...) under fixed shapes:
   trimmed  — coordinate-wise trimmed mean (drop the ``trim`` highest and
              lowest values per coordinate)
   krum     — select the single client minimizing the summed distance to its
-             K - f - 2 nearest neighbours (Blanchard et al. 2017), f = trim
+             m nearest neighbours (Blanchard et al. 2017), f = trim, with
+             m = live - f - 2 clamped into [1, live - 1] so a post-merge
+             population shrink can't push the neighbourhood past the live
+             set (a too-large static K - f - 2 made every score the same
+             sentinel sum and the argmin degenerate to "lowest live id")
 
-Dropped/retired clients (mask 0) contribute a ZERO delta — a "no change"
-vote, neutral for median/trimmed and conservative for krum (documented
-choice: fixed shapes preclude dynamic-K medians under jit).
+For ``median`` dropped/retired clients (mask 0) contribute a ZERO delta —
+a "no change" vote (documented choice: fixed shapes preclude dynamic-K
+medians under jit). ``trimmed`` excludes masked clients from the kept
+window entirely (±inf sentinels sort them past the ends) and renormalizes
+over the actually-kept count — a masked zero vote inside the window would
+bias every coordinate toward 0 as the population shrinks. ``krum`` masks
+them out of both selection and neighbourhoods.
 """
 from __future__ import annotations
 
@@ -39,12 +47,31 @@ def aggregate_median(dx, part):
 
 
 def aggregate_trimmed(dx, part, trim: int = 1):
-    """Coordinate-wise trimmed mean, dropping ``trim`` from each end."""
+    """Coordinate-wise trimmed mean over the LIVE clients: drop ``trim``
+    from each end of the live values, mean the rest.
+
+    Masked clients are pushed past the top of the sort order (+inf
+    sentinel) so the kept window [trim, live - trim) indexes live values
+    only — they neither vote 0 inside the window nor displace live values
+    out of it. The window is clamped so at least one value is always kept
+    (live <= 2*trim keeps the single middle value). Under full
+    participation this is the classic static window [trim, K - trim)
+    bit-for-bit: same sorted values, same kept positions, and the masked
+    sum only appends exact +0.0 terms."""
+    live = jnp.sum(part)
+    lo = jnp.minimum(jnp.float32(trim), jnp.maximum(live - 1.0, 0.0))
+    hi = jnp.clip(live - trim, lo + 1.0, jnp.maximum(live, 1.0))
+    kept_n = hi - lo
+
     def _tm(t):
-        masked = t * _bshape(part, t)
-        s = jnp.sort(masked, axis=0)
-        kept = s[trim : t.shape[0] - trim]
-        return jnp.mean(kept, axis=0)
+        K = t.shape[0]
+        p = _bshape(part, t)
+        s = jnp.sort(jnp.where(p > 0, t * p, jnp.inf), axis=0)
+        idx = _bshape(jnp.arange(K, dtype=jnp.float32), t)
+        keep = (idx >= lo) & (idx < hi)
+        tm = jnp.sum(jnp.where(keep, s, 0.0), axis=0) / kept_n
+        # nobody live: "no change" (never a sentinel leaking into params)
+        return jnp.where(live > 0, tm, 0.0).astype(t.dtype)
 
     return jax.tree_util.tree_map(_tm, dx)
 
@@ -66,9 +93,17 @@ def aggregate_krum(dx, part, f: int = 1):
     d2 = d2 + jnp.where(jnp.eye(K, dtype=bool), jnp.inf, 0.0)
     # masked clients can't be selected and repel selection
     d2 = jnp.where(part[None, :] > 0, d2, jnp.inf)
-    m = max(K - f - 2, 1)
-    nearest = jnp.sort(jnp.where(jnp.isinf(d2), 1e30, d2), axis=1)[:, :m]
-    scores = jnp.sum(nearest, axis=1)
+    # neighbourhood size follows the LIVE population, not the static K:
+    # post-merge live - f - 2 can hit zero or go negative, and a static
+    # K - f - 2 window would sum 1e30 sentinels into every score, making
+    # the argmin degenerate (ties -> lowest live id, attacker's favorite)
+    live = jnp.sum(part)
+    m_live = jnp.clip(
+        live - f - 2, 1.0, jnp.maximum(live - 1.0, 1.0)
+    )
+    d2s = jnp.sort(jnp.where(jnp.isinf(d2), 1e30, d2), axis=1)
+    rank = jnp.arange(K, dtype=jnp.float32)[None, :]
+    scores = jnp.sum(jnp.where(rank < m_live, d2s, 0.0), axis=1)
     scores = jnp.where(part > 0, scores, jnp.inf)
     best = jnp.argmin(scores)
     return jax.tree_util.tree_map(lambda t: t[best], dx)

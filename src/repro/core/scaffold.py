@@ -21,6 +21,25 @@ Fault/attack hooks (all fixed-shape):
   poison_scale (K,)    — multiplies the sent delta: model poisoning
                          (1 healthy, -1 sign-flip, >1 scaling attack)
   active       (K,)    — merge mask: retired (merged-away) nodes are 0
+
+The round is available in two granularities sharing the exact same ops:
+
+  make_round_fn(loss_fn, algo)       — the fused round (train + aggregate
+                                       in one traceable function), the
+                                       historical API.
+  make_train_fn / make_aggregate_fn  — the split halves, for callers that
+                                       must observe or rewrite the stacked
+                                       client deltas BETWEEN local
+                                       training and server aggregation
+                                       (the adaptive-adversary hook,
+                                       core/adversary.py — DESIGN.md §8).
+
+``make_aggregate_fn(algo, adversarial=True)`` additionally takes crafted
+per-client deltas plus an attacker mask: attacker rows' uploads (their
+delta AND the local model the merge policy correlates over) are replaced
+by the crafted values; honest rows are untouched. With
+``adversarial=False`` the composition of the split halves is
+operation-for-operation the fused round — bit-for-bit.
 """
 from __future__ import annotations
 
@@ -45,8 +64,12 @@ class AlgoConfig:
     trim: int = 1                   # trimmed: per-end count; krum: f
 
 
-def make_round_fn(loss_fn, algo: AlgoConfig):
-    """loss_fn(params, batch) -> scalar. Returns a jit-able round function."""
+def make_train_fn(loss_fn, algo: AlgoConfig):
+    """The round's first half: vmapped local training over the stacked
+    clients. ``train_fn(x_g, c_g, c_locals, batches, steps_mask)`` returns
+    ``(dx, dc, c_new, x_locals, losses)`` — the raw per-client deltas
+    BEFORE any poison/participation masking or aggregation, which is
+    exactly what an adaptive adversary is allowed to observe."""
 
     def local_update(x_g, c_g, c_i, batches_i, smask_i):
         """One client. batches_i: pytree leaves (S, B, ...); smask_i: (S,)."""
@@ -92,25 +115,61 @@ def make_round_fn(loss_fn, algo: AlgoConfig):
         mean_loss = jnp.sum(losses * smask_i) / n_eff
         return dx, dc, c_i_new, x_final, mean_loss
 
-    def round_fn(
+    def train_fn(x_g, c_g, c_locals, batches, steps_mask):
+        return jax.vmap(
+            local_update, in_axes=(None, None, 0, 0, 0)
+        )(x_g, c_g, c_locals, batches, steps_mask)
+
+    return train_fn
+
+
+def make_aggregate_fn(algo: AlgoConfig, adversarial: bool = False):
+    """The round's second half: masking + server aggregation of the
+    trained outputs. ``aggregate_fn(x_g, c_g, c_locals, trained, weights,
+    active, round_mask, poison_scale[, adv_dx, adv_mask])`` with
+    ``trained = (dx, dc, c_new, x_locals, losses)`` returns the same
+    5-tuple as the fused round function.
+
+    ``adversarial=True`` adds the crafted-upload substitution: attacker
+    rows (``adv_mask == 1``) send ``adv_dx`` instead of their trained
+    delta (still subject to the participation mask — a dropped attacker
+    sends nothing), and their reported local model becomes
+    ``x_g + adv_dx`` so similarity-based merge policies correlate over
+    what the attacker actually UPLOADED, not what it trained. Attacker
+    control variates keep their honestly-trained values (the attacker
+    trains honestly, then swaps the upload)."""
+
+    def aggregate_fn(
         x_g,                # global params
         c_g,                # global control (zeros for fedavg/fedprox)
-        c_locals,           # stacked (K, ...) local controls
-        batches,            # stacked (K, S, B, ...) pytree
-        steps_mask,         # (K, S) f32
+        c_locals,           # stacked (K, ...) local controls (pre-round)
+        trained,            # (dx, dc, c_new, x_locals, losses) from train
         weights,            # (K,) f32 — n_i (data sizes)
         active,             # (K,) f32 — merge mask
         round_mask,         # (K,) f32 — packet-drop mask this round
         poison_scale,       # (K,) f32 — model-poisoning factor
+        adv_dx=None,        # stacked crafted deltas (adversarial only)
+        adv_mask=None,      # (K,) f32 attacker mask (adversarial only)
     ):
-        dx, dc, c_new, x_locals, losses = jax.vmap(
-            local_update, in_axes=(None, None, 0, 0, 0)
-        )(x_g, c_g, c_locals, batches, steps_mask)
-
+        dx, dc, c_new, x_locals, losses = trained
         part = active * round_mask                    # who is heard this round
         dx = jax.tree_util.tree_map(
             lambda t: t * _bshape(poison_scale * part, t), dx
         )
+        if adversarial:
+            dx = jax.tree_util.tree_map(
+                lambda t, a: jnp.where(
+                    _bshape(adv_mask, t) > 0, a * _bshape(part, t), t
+                ),
+                dx, adv_dx,
+            )
+            x_locals = jax.tree_util.tree_map(
+                lambda xl, a, g: jnp.where(
+                    _bshape(adv_mask * active, xl) > 0,
+                    (g[None] + a).astype(xl.dtype), xl,
+                ),
+                x_locals, adv_dx, x_g,
+            )
         w = weights * part
         wn = w / jnp.maximum(jnp.sum(w), 1e-9)        # n_i / n over participants
 
@@ -133,6 +192,34 @@ def make_round_fn(loss_fn, algo: AlgoConfig):
         else:
             c_g_new = c_g
         return x_g_new, c_g_new, c_new, x_locals, losses
+
+    return aggregate_fn
+
+
+def make_round_fn(loss_fn, algo: AlgoConfig):
+    """loss_fn(params, batch) -> scalar. Returns a jit-able round function
+    — the exact composition of the split halves above (same ops, same
+    order: the refactor is trace-identical to the historical fused
+    round)."""
+    train_fn = make_train_fn(loss_fn, algo)
+    aggregate_fn = make_aggregate_fn(algo)
+
+    def round_fn(
+        x_g,                # global params
+        c_g,                # global control (zeros for fedavg/fedprox)
+        c_locals,           # stacked (K, ...) local controls
+        batches,            # stacked (K, S, B, ...) pytree
+        steps_mask,         # (K, S) f32
+        weights,            # (K,) f32 — n_i (data sizes)
+        active,             # (K,) f32 — merge mask
+        round_mask,         # (K,) f32 — packet-drop mask this round
+        poison_scale,       # (K,) f32 — model-poisoning factor
+    ):
+        trained = train_fn(x_g, c_g, c_locals, batches, steps_mask)
+        return aggregate_fn(
+            x_g, c_g, c_locals, trained, weights, active, round_mask,
+            poison_scale,
+        )
 
     return round_fn
 

@@ -16,6 +16,20 @@ factory's DataAttack reproduces the historical shards bit-for-bit (same
   poisoning     — label-flipped clients (default: 3 of 10, paper §V)
   adverse       — packet loss + poisoning combined (stress mix)
 
+Adaptive-adversary scenarios (core/adversary.py, DESIGN.md §8) — the
+Scenario carries an ``adversary=`` spec, so ``ExperimentSpec`` round-trips
+the whole attack through ``scenario``/``scenario_kwargs``:
+
+  pearson_mimic       — whitebox: mimic an honest client's Pearson
+                        signature to infiltrate its merge group, then
+                        detonate an orthogonal poison through the W-mix
+  colluding_sign_flip — f colluders split one poison direction f ways to
+                        slip under trimmed/krum filters
+  adaptive_scale      — stateful: binary-search the largest poison scale
+                        the active aggregator accepts
+  label_drift         — concept drift: honest clients' label semantics
+                        are permuted mid-run
+
 Register your own with ``@SCENARIOS.register("name")``.
 """
 from __future__ import annotations
@@ -26,6 +40,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.adversary import make_adversary
 from repro.core.federation import Scenario
 from repro.data.attacks import DataAttack
 from repro.data.faults import NetworkDelay, PacketLoss
@@ -154,6 +169,86 @@ def poisoning(num_clients: int, seed: int = 0, poison_frac: float = 0.3,
         name="poisoning",
         data_attacks=attacks,
         model_poison={int(c): -float(sign_flip_scale) for c in sign_flip_ids},
+    )
+
+
+def _attacker_ids(num_clients: int, attacker_frac: float,
+                  client_ids: Optional[Sequence[int]]) -> Tuple[int, ...]:
+    """Adaptive attackers default to the LAST clients — disjoint from the
+    first-clients convention of the static poisoning scenarios, so mixed
+    setups (static + adaptive) don't silently overlap."""
+    if client_ids is not None:
+        return tuple(int(c) for c in client_ids)
+    f = max(1, int(num_clients * attacker_frac))
+    return tuple(range(num_clients - f, num_clients))
+
+
+@SCENARIOS.register("pearson_mimic")
+def pearson_mimic(num_clients: int, seed: int = 0,
+                  attacker_frac: float = 0.2,
+                  client_ids: Optional[Sequence[int]] = None,
+                  gamma: float = 2.0,
+                  target: Optional[int] = None) -> Scenario:
+    """Whitebox mimicry attack on the Pearson merge rule (DESIGN.md §8).
+
+    Attackers default to the LOWEST client ids: the greedy planner makes
+    ``group[0]`` — the lowest-id member — the group's representative, so
+    a low-id infiltrator doesn't just join a merge group, it HIJACKS the
+    intermediary-node role: absorbed honest members are retired, their
+    data weight transfers to the attacker, and every later crafted upload
+    speaks with the whole group's voice."""
+    if client_ids is None:
+        client_ids = range(max(1, int(num_clients * attacker_frac)))
+    ids = _attacker_ids(num_clients, attacker_frac, client_ids)
+    return Scenario(
+        name="pearson_mimic",
+        adversary=make_adversary("pearson_mimic", ids, gamma=gamma,
+                                 target=target),
+    )
+
+
+@SCENARIOS.register("colluding_sign_flip")
+def colluding_sign_flip(num_clients: int, seed: int = 0,
+                        attacker_frac: float = 0.3,
+                        client_ids: Optional[Sequence[int]] = None,
+                        scale: float = 8.0) -> Scenario:
+    """f colluders split one sign-flip direction f ways (graybox)."""
+    ids = _attacker_ids(num_clients, attacker_frac, client_ids)
+    return Scenario(
+        name="colluding_sign_flip",
+        adversary=make_adversary("colluding_sign_flip", ids, scale=scale),
+    )
+
+
+@SCENARIOS.register("adaptive_scale")
+def adaptive_scale(num_clients: int, seed: int = 0,
+                   attacker_frac: float = 0.2,
+                   client_ids: Optional[Sequence[int]] = None,
+                   hi: float = 64.0,
+                   accept_frac: float = 0.25) -> Scenario:
+    """Stateful scale-probing attack on the active aggregator (graybox)."""
+    ids = _attacker_ids(num_clients, attacker_frac, client_ids)
+    return Scenario(
+        name="adaptive_scale",
+        adversary=make_adversary("adaptive_scale", ids, hi=hi,
+                                 accept_frac=accept_frac),
+    )
+
+
+@SCENARIOS.register("label_drift")
+def label_drift(num_clients: int, seed: int = 0,
+                drift_frac: float = 0.5,
+                client_ids: Optional[Sequence[int]] = None,
+                drift_at: Sequence[int] = (4,),
+                num_classes: int = 10) -> Scenario:
+    """Concept drift: affected honest clients' labels permute mid-run."""
+    if client_ids is None:
+        client_ids = tuple(range(max(1, int(num_clients * drift_frac))))
+    return Scenario(
+        name="label_drift",
+        adversary=make_adversary("label_drift", tuple(client_ids),
+                                 drift_at=tuple(drift_at),
+                                 num_classes=num_classes),
     )
 
 

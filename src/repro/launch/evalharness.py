@@ -1,0 +1,212 @@
+"""Paired-seed robustness evaluation harness (DESIGN.md §8).
+
+Comparing two FL configurations by their mean accuracies over independent
+seeds wastes most of the signal: run-to-run variance (data draw,
+partition, fault schedule, batch stream, attack randomness) dwarfs the
+configuration effect. The harness instead exploits that an
+:class:`~repro.launch.experiment.ExperimentSpec`'s ``seed`` field drives
+EVERY stochastic stream of a run — dataset generation, partitioning,
+fault/attack schedules, on-device batch sampling. Two cells of a
+(merge_policy × aggregator × scenario) grid evaluated at the SAME seed
+therefore see the identical world, and their per-seed metric difference
+is a *paired* observation; the paired-difference 95% t-interval over
+n >= 5 seeds is the harness's unit of evidence.
+
+Pieces:
+
+  RunCache      — memoizes ``run_one`` on the (hashable) spec, so a grid
+                  that compares many cells against the same baseline runs
+                  each cell exactly once.
+  run_one       — spec -> :class:`RunResult`: round accuracies, final
+                  per-client accuracy on the CLEAN (pre-attack) shards,
+                  attack-success metrics (attacker-infiltrated merge
+                  groups), and the engine-fallback note if the adversary
+                  forced one.
+  paired_ci     — mean difference + two-sided 95% t-CI from a paired
+                  sample (hard-coded t-table; no scipy dependency).
+  compare_cells — the paired A-vs-B protocol over a seed list.
+
+``benchmarks/robustness_harness.py`` drives the full
+(merge_policy × aggregator × scenario) grid through these and writes
+``BENCH_robustness.json``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch.experiment import (
+    ExperimentSpec,
+    FL_DATASETS,
+    FL_MODELS,
+    PARTITIONS,
+    run_experiment,
+)
+
+# two-sided 95% Student-t critical values by degrees of freedom; beyond
+# the table the normal approximation is within ~2% (df>30)
+_T95 = {
+    1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+    7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 11: 2.201, 12: 2.179,
+    13: 2.160, 14: 2.145, 15: 2.131, 16: 2.120, 17: 2.110, 18: 2.101,
+    19: 2.093, 20: 2.086, 21: 2.080, 22: 2.074, 23: 2.069, 24: 2.064,
+    25: 2.060, 26: 2.056, 27: 2.052, 28: 2.048, 29: 2.045, 30: 2.042,
+}
+
+
+def t95(df: int) -> float:
+    """Two-sided 95% t critical value."""
+    if df < 1:
+        return float("inf")
+    return _T95.get(df, 1.960)
+
+
+def paired_ci(diffs: Sequence[float]) -> Tuple[float, float, float]:
+    """(mean, lo, hi): mean paired difference with its 95% t-CI.
+
+    With one observation the CI is infinite (df=0) — callers asserting
+    significance on a single seed get an honest "no evidence"."""
+    d = np.asarray(diffs, np.float64)
+    n = len(d)
+    mean = float(d.mean())
+    if n < 2:
+        return mean, float("-inf"), float("inf")
+    half = t95(n - 1) * float(d.std(ddof=1)) / float(np.sqrt(n))
+    return mean, mean - half, mean + half
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RunResult:
+    """One finished run, reduced to the harness's metrics."""
+
+    spec: ExperimentSpec
+    accuracies: Tuple[float, ...]          # per-round global accuracy
+    final_accuracy: float
+    mean_accuracy_tail: float              # mean of the last 3 rounds
+    per_client_accuracy: Tuple[float, ...]  # final params on CLEAN shards
+    attacker_ids: Tuple[int, ...]
+    merged_groups: Tuple[Tuple[int, ...], ...]   # all groups, all rounds
+    infiltrated_groups: int   # merge groups holding attacker AND honest
+    active_nodes_end: int
+    engine_fallback: Optional[str]
+
+
+def clean_shards(spec: ExperimentSpec):
+    """The spec's client shards BEFORE any scenario data attack or
+    adversarial drift — rebuilt from the same seeded dataset + partition
+    registries the simulator used, so per-client accuracy is measured
+    against what each client's data distribution *really* is."""
+    x_tr, y_tr, _x_te, _y_te = FL_DATASETS.get(spec.dataset)(spec)
+    parts = PARTITIONS.get(spec.partition)(
+        y_tr, spec.num_clients, seed=spec.seed, **spec.partition_kwargs
+    )
+    return [(x_tr[p], y_tr[p]) for p in parts]
+
+
+def per_client_accuracy(spec: ExperimentSpec, params) -> Tuple[float, ...]:
+    """Final-model accuracy on every client's clean shard. Models whose
+    FL_MODELS entry is a legacy 3-tuple (no per-shard accuracy fn)
+    report an empty tuple rather than failing the run."""
+    _x_tr, _y_tr, x_te, y_te = FL_DATASETS.get(spec.dataset)(spec)
+    entry = FL_MODELS.get(spec.model)(spec, x_te, y_te)
+    if len(entry) < 4:
+        return ()
+    acc_fn = entry[3]
+    return tuple(
+        float(acc_fn(params, x, y)) if len(y) else float("nan")
+        for x, y in clean_shards(spec)
+    )
+
+
+def _infiltration(groups, attackers) -> int:
+    """Merge groups containing at least one attacker AND one honest
+    member — the attack-success metric for similarity-gaming attacks."""
+    att = set(attackers)
+    return sum(
+        1 for g in groups if att & set(g) and set(g) - att
+    )
+
+
+def run_one(spec: ExperimentSpec, verbose: bool = False) -> RunResult:
+    """Execute a spec and reduce it to the harness metrics."""
+    sim, hist = run_experiment(spec, verbose=verbose)
+    accs = tuple(float(r.accuracy) for r in hist)
+    adv = sim.adversary
+    attackers = tuple(adv.client_ids) if adv is not None else ()
+    groups = tuple(g for r in hist for g in r.merged_groups)
+    return RunResult(
+        spec=spec,
+        accuracies=accs,
+        final_accuracy=accs[-1] if accs else float("nan"),
+        mean_accuracy_tail=float(np.mean(accs[-3:])) if accs else float("nan"),
+        per_client_accuracy=per_client_accuracy(spec, sim.params),
+        attacker_ids=attackers,
+        merged_groups=groups,
+        infiltrated_groups=_infiltration(groups, attackers),
+        active_nodes_end=hist[-1].active_nodes_end if hist else spec.num_clients,
+        engine_fallback=sim.engine_adversary_fallback,
+    )
+
+
+class RunCache:
+    """Memoizes runs on the hashable spec, so grid comparisons that share
+    cells (every attack cell pairs against the same clean baseline)
+    execute each spec exactly once. ExperimentSpec hashes on its scalar /
+    tuple fields and compares on everything including the kwargs dicts,
+    so dict-keyed lookups are exact."""
+
+    def __init__(self):
+        self._runs: Dict[ExperimentSpec, RunResult] = {}
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        hit = self._runs.get(spec)
+        if hit is None:
+            hit = self._runs[spec] = run_one(spec)
+        return hit
+
+    def __len__(self) -> int:
+        return len(self._runs)
+
+
+def seeded(spec: ExperimentSpec, seeds: Sequence[int]) -> List[ExperimentSpec]:
+    return [replace(spec, seed=int(s)) for s in seeds]
+
+
+def cell_runs(cache: RunCache, spec: ExperimentSpec,
+              seeds: Sequence[int]) -> List[RunResult]:
+    """The cell's runs over the paired seed list."""
+    return [cache.run(s) for s in seeded(spec, seeds)]
+
+
+@dataclass(frozen=True)
+class PairedComparison:
+    """A paired A-vs-B verdict: per-seed differences of ``metric`` and
+    their 95% t-CI. ``significant`` means the CI excludes zero."""
+
+    metric: str
+    diffs: Tuple[float, ...]          # metric(a) - metric(b), per seed
+    mean: float
+    ci_lo: float
+    ci_hi: float
+
+    @property
+    def significant(self) -> bool:
+        return self.ci_lo > 0.0 or self.ci_hi < 0.0
+
+
+def compare_cells(cache: RunCache, spec_a: ExperimentSpec,
+                  spec_b: ExperimentSpec, seeds: Sequence[int],
+                  metric: str = "final_accuracy") -> PairedComparison:
+    """Paired difference metric(a) - metric(b) over the shared seeds."""
+    ra = cell_runs(cache, spec_a, seeds)
+    rb = cell_runs(cache, spec_b, seeds)
+    diffs = tuple(
+        float(getattr(a, metric)) - float(getattr(b, metric))
+        for a, b in zip(ra, rb)
+    )
+    mean, lo, hi = paired_ci(diffs)
+    return PairedComparison(metric=metric, diffs=diffs, mean=mean,
+                            ci_lo=lo, ci_hi=hi)

@@ -13,6 +13,10 @@ Registries (see also core/merge_policy.MERGE_POLICIES and
 core/scenarios.SCENARIOS):
 
   FL_MODELS    name -> (spec, x_te, y_te) -> (init_fn, loss_fn, eval_fn)
+               or, optionally, a 4-tuple whose last element is a
+               per-shard accuracy fn ``acc_fn(params, x, y) -> float``
+               (the robustness harness's per-client accuracy hook;
+               3-tuple entries keep working everywhere)
   FL_DATASETS  name -> (spec) -> (x_tr, y_tr, x_te, y_te)
   PARTITIONS   name -> (labels, num_clients, seed, **kw) -> index arrays
   MESHES       name -> () -> jax Mesh  (the spec stores the NAME, so specs
@@ -192,7 +196,8 @@ def build_simulator(spec: ExperimentSpec) -> FederatedSimulator:
     scenario = build_scenario(
         spec.scenario, spec.num_clients, spec.seed, **spec.scenario_kwargs
     )
-    init_fn, loss_fn, eval_fn = FL_MODELS.get(spec.model)(spec, x_te, y_te)
+    entry = FL_MODELS.get(spec.model)(spec, x_te, y_te)
+    init_fn, loss_fn, eval_fn = entry[0], entry[1], entry[2]
     return FederatedSimulator(
         init_params_fn=init_fn,
         loss_fn=loss_fn,
@@ -256,6 +261,7 @@ def _model_cnn_mnist(spec: ExperimentSpec, x_te, y_te):
         lambda key: cnn_init(key, ccfg),
         lambda params, batch: cnn_loss(params, ccfg, batch),
         lambda params: cnn_accuracy(params, ccfg, x_te, y_te),
+        lambda params, x, y: cnn_accuracy(params, ccfg, x, y),
     )
 
 
@@ -268,6 +274,7 @@ def _model_linear(spec: ExperimentSpec, x_te, y_te):
         lambda key: linear_init(key, dim, num_classes),
         linear_loss,
         lambda params: linear_accuracy(params, x_te, y_te),
+        lambda params, x, y: linear_accuracy(params, x, y),
     )
 
 

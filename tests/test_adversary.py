@@ -1,0 +1,406 @@
+"""Adaptive adversary engine (core/adversary.py, DESIGN.md §8): craft
+unit semantics, the split-round substitution contract, scenario/spec
+round-trips, engine-vs-device parity for in-scan adversaries, the
+documented host fallback, and the pearson_mimic infiltration
+integration."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adversary import (
+    ADVERSARIES,
+    AdaptiveScale,
+    ColludingSignFlip,
+    LabelDrift,
+    PearsonMimic,
+    flatten_params,
+    flatten_stacked,
+    make_adversary,
+    make_context,
+    unflatten_like,
+)
+from repro.launch.experiment import ExperimentSpec, run_experiment
+
+K = 8
+
+
+def _toy_spec(**kw) -> ExperimentSpec:
+    base = dict(
+        model="linear",
+        dataset="blobs",
+        n_train=K * 120,
+        n_test=300,
+        data_kwargs={"num_classes": 4, "dim": 8},
+        partition="class_pairs",
+        partition_kwargs={"n_per": 120},
+        num_clients=K,
+        lr_local=0.1,
+        merge_at=(2,),
+        threshold=0.6,
+        rounds=6,
+        local_epochs=2,
+        steps_per_epoch=5,
+        batch_size=16,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _ctx(dx_rows, active=None, part=None, weights=None, corr=None, t=0,
+         x_g=None):
+    dx_rows = np.asarray(dx_rows, np.float32)
+    k = dx_rows.shape[0]
+    dx = {"w": jnp.asarray(dx_rows)}
+    act = jnp.ones(k) if active is None else jnp.asarray(active, jnp.float32)
+    prt = act if part is None else jnp.asarray(part, jnp.float32)
+    w = jnp.ones(k) if weights is None else jnp.asarray(weights, jnp.float32)
+    xg = {"w": jnp.zeros(dx_rows.shape[1])} if x_g is None else x_g
+    x_locals = jax.tree_util.tree_map(lambda g, d: g[None] + d, xg, dx)
+    return make_context(
+        jnp.asarray(t, jnp.int32), xg, dx, x_locals, act, prt, w,
+        threshold=0.6, lr_global=1.0,
+        corr=None if corr is None else jnp.asarray(corr, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers + registry
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_round_trip():
+    tree = {
+        "a": jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 2, 2)),
+        "b": jnp.asarray(np.arange(3, dtype=np.float32).reshape(3, 1)),
+    }
+    mat = flatten_stacked(tree)
+    assert mat.shape == (3, 5)
+    back = unflatten_like(mat, tree)
+    for k_ in tree:
+        np.testing.assert_array_equal(np.asarray(back[k_]),
+                                      np.asarray(tree[k_]))
+    v = flatten_params({k_: tree[k_][0] for k_ in tree})
+    assert v.shape == (5,)
+
+
+def test_registry_and_masks():
+    for name in ("pearson_mimic", "colluding_sign_flip", "adaptive_scale",
+                 "label_drift"):
+        assert name in ADVERSARIES
+    adv = make_adversary("colluding_sign_flip", (2, 5), scale=4.0)
+    m = adv.mask(K)
+    assert m.tolist() == [0, 0, 1, 0, 0, 1, 0, 0]
+    assert adv.scale == 4.0 and adv.client_ids == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# craft unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_colluding_sign_flip_splits_magnitude():
+    """All f attackers upload the SAME vector -(scale/f) * mean honest
+    delta: collective strength of one scale-s flip, individual uploads
+    f times smaller."""
+    rows = np.asarray([[1.0, 0.0], [3.0, 2.0], [0.0, 0.0], [0.0, 0.0]])
+    adv = ColludingSignFlip((2, 3), scale=6.0)
+    crafted, state = adv.craft(_ctx(rows, active=[1, 1, 1, 1]), ())
+    got = np.asarray(crafted["w"])
+    mean_h = rows[:2].mean(axis=0) / 2 * 2  # honest mean over active-honest
+    # honest mask excludes attackers: mean of rows 0,1
+    expect = -(6.0 / 2) * rows[:2].mean(axis=0)
+    np.testing.assert_allclose(got[2], expect, rtol=1e-5)
+    np.testing.assert_allclose(got[3], expect, rtol=1e-5)
+    assert state == ()
+
+
+def test_pearson_mimic_mimics_then_detonates():
+    """Pre-merge (full population): crafted delta = target's update plus
+    an ORTHOGONAL poison of gamma x its norm. Post-merge (population
+    shrank): the full anti-update."""
+    rng = np.random.default_rng(0)
+    rows = rng.normal(size=(4, 6)).astype(np.float32)
+    corr = np.eye(4, dtype=np.float32)
+    corr[1, 2] = corr[2, 1] = 0.9        # client 1 <-> 2 most-correlated
+    adv = PearsonMimic((3,), gamma=2.0, detonation=5.0)
+    crafted, _ = adv.craft(_ctx(rows, corr=corr), ())
+    d = np.asarray(crafted["w"])[3]
+    # target = most central honest row (1 or 2); mimic component present:
+    mean_h = rows[:3].mean(axis=0)
+    tgt = max((1, 2, 0), key=lambda i: corr[i, :3].sum())
+    u = rows[tgt]
+    resid = d - u
+    # the poison rides orthogonally to the mimic component
+    assert abs(float(resid @ u)) < 1e-3 * np.linalg.norm(resid) * \
+        np.linalg.norm(u) + 1e-5
+    np.testing.assert_allclose(
+        np.linalg.norm(resid), 2.0 * np.linalg.norm(u), rtol=1e-4
+    )
+    # population shrank -> detonation
+    crafted2, _ = adv.craft(
+        _ctx(rows, active=[1, 1, 1, 0], corr=corr), ()
+    )
+    d2 = np.asarray(crafted2["w"])[3]
+    h = np.asarray([1, 1, 1, 0], np.float32)
+    mean_live_h = (rows * h[:, None]).sum(axis=0) / 3
+    np.testing.assert_allclose(d2, -5.0 * mean_live_h, rtol=1e-4)
+
+
+def test_pearson_mimic_explicit_target():
+    rows = np.eye(4, dtype=np.float32)
+    adv = PearsonMimic((0,), gamma=0.0, target=2)
+    crafted, _ = adv.craft(_ctx(rows, corr=np.eye(4, dtype=np.float32)), ())
+    np.testing.assert_allclose(
+        np.asarray(crafted["w"])[0], rows[2], atol=1e-6
+    )
+
+
+def test_adaptive_scale_binary_search_state():
+    """The probe scale halves toward lo/hi depending on whether the
+    global model moved along last round's poison direction."""
+    rows = np.asarray([[1.0, 0.0], [1.0, 0.0], [0.0, 0.0]], np.float32)
+    adv = AdaptiveScale((2,), hi=16.0, accept_frac=0.5)
+    params = {"w": jnp.zeros(2)}
+    st = adv.init_state(params, 3)
+    assert float(st["scale"]) == 8.0 and float(st["armed"]) == 0.0
+    # round 0: unarmed -> probes the initial midpoint, arms itself
+    _, st = adv.craft(_ctx(rows, x_g=params), st)
+    assert float(st["armed"]) == 1.0
+    s0 = float(st["scale"])
+    assert s0 == 8.0
+    # round 1, REJECTED: x_g did not move along prev_dir -> hi shrinks
+    _, st_rej = adv.craft(_ctx(rows, x_g=params, t=1), dict(st))
+    assert float(st_rej["hi"]) == pytest.approx(s0)
+    assert float(st_rej["scale"]) == pytest.approx(
+        0.5 * (float(st["lo"]) + s0)
+    )
+    # round 1, ACCEPTED: x_g moved exactly as a full acceptance would
+    moved = {"w": jnp.asarray(np.asarray(st["prev_dir"])
+                              * float(st["expected"]))}
+    _, st_acc = adv.craft(_ctx(rows, x_g=moved, t=1), dict(st))
+    assert float(st_acc["lo"]) == pytest.approx(s0)
+    assert float(st_acc["scale"]) > s0
+
+
+def test_label_drift_permutes_only_named_clients_at_drift_round():
+    shards = [
+        (np.zeros((6, 2), np.float32), np.arange(6, dtype=np.int64) % 4)
+        for _ in range(3)
+    ]
+    adv = LabelDrift((0, 2), drift_at=(3,), num_classes=4)
+    assert adv.pre_round(2, shards, seed=5) is None
+    out = adv.pre_round(3, shards, seed=5)
+    assert out is not None
+    assert not np.array_equal(out[0][1], shards[0][1])     # drifted
+    np.testing.assert_array_equal(out[1][1], shards[1][1])  # untouched
+    assert not np.array_equal(out[2][1], shards[2][1])
+    # label set preserved (a permutation, not noise)
+    assert set(out[0][1]) == set(shards[0][1])
+    # deterministic under the seed
+    again = adv.pre_round(3, shards, seed=5)
+    np.testing.assert_array_equal(out[0][1], again[0][1])
+
+
+# ---------------------------------------------------------------------------
+# split-round substitution contract
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_fn_substitutes_attacker_uploads():
+    """Attacker rows send the crafted delta (and report x_g + crafted as
+    their local model); honest rows and attacker control variates keep
+    their trained values. A dropped attacker sends nothing."""
+    from repro.core.scaffold import AlgoConfig, make_aggregate_fn
+
+    k, d = 4, 3
+    rng = np.random.default_rng(2)
+    x_g = {"w": jnp.asarray(rng.normal(size=d).astype(np.float32))}
+    dx = {"w": jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))}
+    c0 = {"w": jnp.zeros((k, d))}
+    x_locals = jax.tree_util.tree_map(lambda g, t: g[None] + t, x_g, dx)
+    losses = jnp.zeros(k)
+    trained = (dx, c0, c0, x_locals, losses)
+    adv_dx = {"w": jnp.asarray(np.full((k, d), 7.0, np.float32))}
+    adv_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0])
+    agg = make_aggregate_fn(AlgoConfig(algorithm="fedavg"), adversarial=True)
+
+    round_mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])  # attacker 3 dropped
+    x_new, _cg, _cl, x_loc_out, _ = agg(
+        x_g, {"w": jnp.zeros(d)}, c0, trained, jnp.ones(k), jnp.ones(k),
+        round_mask, jnp.ones(k), adv_dx, adv_mask,
+    )
+    # server delta: honest rows 0,2 trained; attacker 1 crafted; 3 dropped
+    expect = (np.asarray(dx["w"])[0] + 7.0 + np.asarray(dx["w"])[2]) / 3.0
+    np.testing.assert_allclose(
+        np.asarray(x_new["w"]), np.asarray(x_g["w"]) + expect, rtol=1e-5
+    )
+    # attacker rows REPORT the crafted local model (merge policies
+    # correlate over the actual upload), honest rows their trained one
+    np.testing.assert_allclose(
+        np.asarray(x_loc_out["w"])[1], np.asarray(x_g["w"]) + 7.0, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(x_loc_out["w"])[0], np.asarray(x_locals["w"])[0],
+        rtol=1e-6,
+    )
+
+
+def test_split_round_composition_is_fused_round():
+    """make_train_fn + make_aggregate_fn == make_round_fn, bit-for-bit
+    (the adversary hook refactor must not move the adversary-free
+    trajectory)."""
+    from repro.core.scaffold import (
+        AlgoConfig, init_controls, make_aggregate_fn, make_round_fn,
+        make_train_fn,
+    )
+
+    k, d, s, b = 5, 4, 3, 8
+    rng = np.random.default_rng(4)
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    algo = AlgoConfig(algorithm="scaffold", lr_local=0.05)
+    x = {"w": jnp.asarray(rng.normal(size=d).astype(np.float32))}
+    c_g, c_l = init_controls(x, k)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(k, s, b, d)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(k, s, b)).astype(np.float32)),
+    }
+    args = (jnp.ones((k, s)), jnp.ones(k), jnp.ones(k), jnp.ones(k),
+            jnp.ones(k))
+    fused = jax.jit(make_round_fn(loss, algo))(x, c_g, c_l, batches, *args)
+    train = jax.jit(make_train_fn(loss, algo))
+    agg = jax.jit(make_aggregate_fn(algo))
+    trained = train(x, c_g, c_l, batches, args[0])
+    split = agg(x, c_g, c_l, trained, *args[1:])
+    for f_leaf, s_leaf in zip(jax.tree_util.tree_leaves(fused),
+                              jax.tree_util.tree_leaves(split)):
+        np.testing.assert_array_equal(np.asarray(f_leaf), np.asarray(s_leaf))
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip + integration
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_scenarios_round_trip_through_spec():
+    spec = _toy_spec(scenario="pearson_mimic",
+                     scenario_kwargs={"client_ids": [0], "gamma": 1.5})
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    from repro.core.scenarios import build_scenario
+    sc = build_scenario(again.scenario, again.num_clients, again.seed,
+                        **again.scenario_kwargs)
+    assert sc.adversary is not None
+    assert sc.adversary.name == "pearson_mimic"
+    assert sc.adversary.client_ids == (0,)
+    assert sc.adversary.gamma == 1.5
+
+
+def test_pearson_mimic_infiltrates_and_degrades():
+    """The acceptance-shaped integration: on the toy task the mimic joins
+    a merge group with honest clients, hijacks the representative slot
+    (lowest id), and the post-merge detonation drags accuracy well below
+    the clean run."""
+    clean_spec = _toy_spec(scenario="normal", rounds=8)
+    atk_spec = _toy_spec(scenario="pearson_mimic",
+                         scenario_kwargs={"client_ids": [0]}, rounds=8)
+    _, clean = run_experiment(clean_spec, verbose=False)
+    sim, atk = run_experiment(atk_spec, verbose=False)
+    groups = [g for r in atk for g in r.merged_groups]
+    assert any(0 in g and len(g) > 1 for g in groups), (
+        f"attacker failed to infiltrate: {groups}"
+    )
+    # the attacker is the representative of its group (lowest id wins)
+    g0 = next(g for g in groups if 0 in g)
+    assert g0[0] == 0
+    assert clean[-1].accuracy - atk[-1].accuracy > 0.2
+
+
+def test_mimic_blunted_by_robust_aggregators():
+    """median / trimmed / krum hold the line the plain mean gives up."""
+    accs = {}
+    for agg in ("mean", "trimmed"):
+        spec = _toy_spec(scenario="pearson_mimic",
+                         scenario_kwargs={"client_ids": [0]},
+                         aggregator=agg, rounds=8)
+        _, hist = run_experiment(spec, verbose=False)
+        accs[agg] = hist[-1].accuracy
+    assert accs["trimmed"] - accs["mean"] > 0.2
+
+
+# ---------------------------------------------------------------------------
+# engine: in-scan adversaries + the documented host fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "scenario,kwargs,atol",
+    [
+        # whitebox: an extra in-program similarity changes XLA fusion ->
+        # documented ulp-level tolerance on the loss reduction
+        ("pearson_mimic", {"client_ids": [0]}, 2e-6),
+        ("colluding_sign_flip", {}, 0.0),
+        ("adaptive_scale", {}, 0.0),
+    ],
+)
+def test_engine_matches_device_for_jittable_adversaries(scenario, kwargs,
+                                                        atol):
+    hists, sims = {}, {}
+    for pipe in ("device", "engine"):
+        spec = _toy_spec(scenario=scenario, scenario_kwargs=dict(kwargs),
+                         pipeline=pipe)
+        sims[pipe], hists[pipe] = run_experiment(spec, verbose=False)
+    assert sims["engine"].engine_adversary_fallback is None
+    dev, eng = hists["device"], hists["engine"]
+    assert len(dev) == len(eng)
+    for d, e in zip(dev, eng):
+        assert d.merged_groups == e.merged_groups
+        assert d.active_nodes == e.active_nodes
+        assert d.active_nodes_end == e.active_nodes_end
+        assert d.updates_sent == e.updates_sent
+    acc_d = np.asarray([r.accuracy for r in dev])
+    acc_e = np.asarray([r.accuracy for r in eng])
+    ml_d = np.asarray([r.mean_loss for r in dev])
+    ml_e = np.asarray([r.mean_loss for r in eng])
+    if atol == 0.0:
+        np.testing.assert_array_equal(acc_d, acc_e)
+        np.testing.assert_array_equal(ml_d, ml_e)
+    else:
+        np.testing.assert_array_equal(acc_d, acc_e)
+        np.testing.assert_allclose(ml_d, ml_e, atol=atol)
+
+
+def test_engine_adaptive_scale_threads_state_through_scan():
+    """The stateful adversary's carry survives the compiled segments: by
+    the end of the run the binary search has moved off its initial probe
+    and recorded a live previous direction."""
+    spec = _toy_spec(scenario="adaptive_scale", pipeline="engine")
+    sim, _ = run_experiment(spec, verbose=False)
+    st = jax.device_get(sim._adv_state)
+    assert float(st["armed"]) == 1.0
+    assert float(np.abs(st["prev_dir"]).sum()) > 0.0
+
+
+def test_engine_falls_back_for_host_stateful_adversary():
+    """label_drift (host shard surgery) cannot run in-scan: the engine
+    run takes the documented per-round fallback, records WHY, and
+    reproduces the device pipeline exactly."""
+    hists, sims = {}, {}
+    for pipe in ("device", "engine"):
+        spec = _toy_spec(scenario="label_drift",
+                         scenario_kwargs={"num_classes": 4, "drift_at": [3]},
+                         pipeline=pipe)
+        sims[pipe], hists[pipe] = run_experiment(spec, verbose=False)
+    fb = sims["engine"].engine_adversary_fallback
+    assert fb is not None and "label_drift" in fb
+    assert sims["device"].engine_adversary_fallback is None
+    np.testing.assert_array_equal(
+        [r.accuracy for r in hists["device"]],
+        [r.accuracy for r in hists["engine"]],
+    )
+    assert [r.merged_groups for r in hists["device"]] == \
+        [r.merged_groups for r in hists["engine"]]

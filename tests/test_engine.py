@@ -267,3 +267,37 @@ def test_engine_spec_pipeline_accepted():
     assert ExperimentSpec.from_json(spec.to_json()).pipeline == "engine"
     with pytest.raises(ValueError, match="pipeline"):
         validate_spec(ExperimentSpec(pipeline="turbo"))
+
+
+def test_engine_host_parity_under_static_sign_flip():
+    """Engine vs the numpy host oracle under poisoning(sign_flip_ids=...):
+    schedule-driven accounting agrees exactly up to the merge round; the
+    merge itself and everything after are behavioral only, because the
+    host pipeline draws a DIFFERENT batch stream by design and the
+    poisoned similarities sit near the threshold — but the attack's dent
+    must show on both trajectories."""
+    hists = {}
+    kw = {"client_ids": (), "sign_flip_ids": (0,), "sign_flip_scale": 8.0}
+    for pipeline in ("engine", "host"):
+        sim = _make(pipeline, scenario="poisoning", scenario_kw=dict(kw),
+                    rounds=6, threshold=0.6, seed=3)
+        hists[pipeline] = sim.run()
+    eng, host = hists["engine"], hists["host"]
+    assert len(eng) == len(host) == 6
+    # pre-merge rounds: full participation, identical accounting
+    for e, h in zip(eng[:3], host[:3]):
+        assert e.round == h.round
+        assert e.active_nodes == h.active_nodes == NUM_CLIENTS
+        assert e.updates_sent == h.updates_sent == NUM_CLIENTS
+        assert e.bytes_sent == h.bytes_sent
+        assert abs(e.accuracy - h.accuracy) < 0.1
+    # both pipelines merge at the scheduled round and keep their reduced
+    # populations consistent with their own groups thereafter
+    for hist in (eng, host):
+        assert hist[2].merged_groups
+        retired = sum(len(g) - 1 for g in hist[2].merged_groups)
+        assert hist[2].active_nodes_end == NUM_CLIENTS - retired
+        for r in hist[3:]:
+            assert r.active_nodes == r.updates_sent == hist[2].active_nodes_end
+    # the sign-flip attacker dents both trajectories (clean runs end ~0.99)
+    assert eng[-1].accuracy < 0.8 and host[-1].accuracy < 0.8

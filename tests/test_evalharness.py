@@ -1,0 +1,216 @@
+"""Paired-seed evaluation harness (launch/evalharness.py) and the
+robustness benchmark's report schema (benchmarks/robustness_harness.py
+--smoke, the CI leg)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.launch.evalharness import (
+    PairedComparison,
+    RunCache,
+    cell_runs,
+    clean_shards,
+    compare_cells,
+    paired_ci,
+    per_client_accuracy,
+    run_one,
+    seeded,
+    t95,
+)
+from repro.launch.experiment import ExperimentSpec
+
+K = 6
+
+
+def _spec(**kw) -> ExperimentSpec:
+    base = dict(
+        model="linear",
+        dataset="blobs",
+        n_train=K * 90,
+        n_test=200,
+        data_kwargs={"num_classes": 3, "dim": 6},
+        partition="class_pairs",
+        partition_kwargs={"n_per": 90},
+        num_clients=K,
+        lr_local=0.1,
+        merge_at=(2,),
+        threshold=0.6,
+        rounds=5,
+        local_epochs=2,
+        steps_per_epoch=4,
+        batch_size=16,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+
+
+def test_t95_table_values():
+    assert t95(1) == pytest.approx(12.706)
+    assert t95(4) == pytest.approx(2.776)
+    assert t95(30) == pytest.approx(2.042)
+    assert t95(200) == pytest.approx(1.960)   # normal tail beyond table
+    assert t95(0) == float("inf")
+
+
+def test_paired_ci_hand_computed():
+    # diffs 1..5: mean 3, sd sqrt(2.5), half = 2.776*sd/sqrt(5)
+    mean, lo, hi = paired_ci([1.0, 2.0, 3.0, 4.0, 5.0])
+    assert mean == pytest.approx(3.0)
+    half = 2.776 * math.sqrt(2.5) / math.sqrt(5)
+    assert lo == pytest.approx(3.0 - half, abs=1e-9)
+    assert hi == pytest.approx(3.0 + half, abs=1e-9)
+
+
+def test_paired_ci_degenerate_cases():
+    mean, lo, hi = paired_ci([0.7])            # n=1: no evidence
+    assert mean == pytest.approx(0.7)
+    assert lo == float("-inf") and hi == float("inf")
+    mean, lo, hi = paired_ci([2.0, 2.0, 2.0])  # zero variance: point CI
+    assert (mean, lo, hi) == (2.0, 2.0, 2.0)
+
+
+def test_paired_comparison_significance():
+    assert PairedComparison("m", (1.0,), 1.0, 0.2, 1.8).significant
+    assert PairedComparison("m", (-1.0,), -1.0, -1.8, -0.2).significant
+    assert not PairedComparison("m", (0.1,), 0.1, -0.2, 0.4).significant
+
+
+# ---------------------------------------------------------------------------
+# run reduction + caching
+# ---------------------------------------------------------------------------
+
+
+def test_run_one_metrics():
+    res = run_one(_spec())
+    assert len(res.accuracies) == 5
+    assert res.final_accuracy == res.accuracies[-1]
+    assert res.mean_accuracy_tail == pytest.approx(
+        float(np.mean(res.accuracies[-3:]))
+    )
+    assert len(res.per_client_accuracy) == K
+    assert all(0.0 <= a <= 1.0 for a in res.per_client_accuracy)
+    assert res.attacker_ids == ()
+    assert res.infiltrated_groups == 0
+    assert res.engine_fallback is None
+
+
+def test_run_one_attack_metrics():
+    res = run_one(_spec(
+        scenario="pearson_mimic",
+        scenario_kwargs={"client_ids": [0]},
+        rounds=8,
+    ))
+    assert res.attacker_ids == (0,)
+    assert res.infiltrated_groups >= 1
+    assert res.active_nodes_end < K
+
+
+def test_clean_shards_ignore_attack():
+    """per-client accuracy is measured against the PRE-attack shards: the
+    clean and attacked spec see identical client data."""
+    a = clean_shards(_spec())
+    b = clean_shards(_spec(scenario="label_drift",
+                           scenario_kwargs={"num_classes": 3}))
+    assert len(a) == len(b) == K
+    for (xa, ya), (xb, yb) in zip(a, b):
+        np.testing.assert_array_equal(ya, yb)
+        np.testing.assert_array_equal(xa, xb)
+
+
+def test_run_cache_memoizes_on_spec():
+    cache = RunCache()
+    spec = _spec()
+    r1 = cache.run(spec)
+    r2 = cache.run(_spec())          # equal spec, distinct object
+    assert r1 is r2 and len(cache) == 1
+    cache.run(_spec(seed=1))
+    assert len(cache) == 2
+    # kwargs dicts participate in equality even though they don't hash
+    cache.run(_spec(scenario_kwargs={"client_ids": [0]},
+                    scenario="pearson_mimic"))
+    assert len(cache) == 3
+
+
+def test_seeded_and_cell_runs():
+    cache = RunCache()
+    specs = seeded(_spec(), [0, 1])
+    assert [s.seed for s in specs] == [0, 1]
+    runs = cell_runs(cache, _spec(), [0, 1])
+    assert len(runs) == 2 and len(cache) == 2
+    runs2 = cell_runs(cache, _spec(), [0, 1])
+    assert runs2[0] is runs[0] and len(cache) == 2
+
+
+def test_compare_cells_self_is_exactly_zero():
+    """A cell against itself on shared seeds: every paired diff is 0.0 —
+    the determinism fact the whole pairing protocol rests on."""
+    cache = RunCache()
+    cmp_ = compare_cells(cache, _spec(), _spec(), [0, 1, 2])
+    assert cmp_.diffs == (0.0, 0.0, 0.0)
+    assert cmp_.mean == 0.0 and not cmp_.significant
+    assert len(cache) == 3           # both sides hit the same cached runs
+
+
+def test_compare_cells_detects_attack():
+    cache = RunCache()
+    atk = _spec(scenario="colluding_sign_flip", rounds=6)
+    cmp_ = compare_cells(cache, _spec(rounds=6), atk, [0, 1, 2])
+    assert cmp_.mean > 0.3
+    assert cmp_.significant
+
+
+# ---------------------------------------------------------------------------
+# benchmark report schema (the CI smoke leg runs this exact entry point)
+# ---------------------------------------------------------------------------
+
+
+def test_robustness_harness_smoke_schema(tmp_path):
+    from benchmarks import robustness_harness as rh
+
+    out = tmp_path / "BENCH_robustness.json"
+    report = rh.run(smoke=True, out=str(out))
+    on_disk = json.loads(out.read_text())
+    assert on_disk["benchmark"] == "robustness_harness"
+    assert on_disk["smoke"] is True
+    assert on_disk["seeds"] == [0, 1]
+    assert set(on_disk["grid"]) == {"scenarios", "merge_policies",
+                                    "aggregators"}
+    # 2 scenarios x 1 policy x 2 aggregators
+    assert len(on_disk["cells"]) == 4
+    for cell in on_disk["cells"]:
+        for key in ("scenario", "merge_policy", "aggregator", "seeds",
+                    "final_accuracy", "final_accuracy_mean",
+                    "final_accuracy_ci95", "per_client_accuracy_mean",
+                    "infiltrated_groups", "infiltrated_runs",
+                    "active_nodes_end", "engine_fallback"):
+            assert key in cell, key
+        assert len(cell["final_accuracy"]) == 2
+        assert len(cell["final_accuracy_ci95"]) == 2
+        if cell["scenario"] != "clean":
+            d = cell["degradation_vs_clean"]
+            assert set(d) == {"metric", "diffs", "mean", "ci95",
+                              "significant", "n"}
+            assert d["n"] == 2
+    acc = on_disk["acceptance"]
+    for key in ("paired_seeds", "mimic_infiltrates_every_run",
+                "mimic_degradation_on_pearson_mean",
+                "mimic_degrades_significantly", "passed"):
+        assert key in acc, key
+    # the attack lands in smoke too, even if 2 seeds can't prove it
+    mimic_mean = next(
+        c for c in on_disk["cells"]
+        if (c["scenario"], c["aggregator"]) == ("pearson_mimic", "mean")
+    )
+    assert mimic_mean["infiltrated_runs"] == 2
+    assert mimic_mean["degradation_vs_clean"]["mean"] > 0.2
+    assert report["runs_executed"] == len(
+        {(c["scenario"], c["merge_policy"], c["aggregator"], s)
+         for c in on_disk["cells"] for s in c["seeds"]}
+    )

@@ -85,3 +85,163 @@ def test_robust_aggregators_survive_sign_flip_integration():
     assert dist["median"] < dist["mean"]
     assert dist["trimmed"] < dist["mean"]
     assert dist["krum"] < dist["mean"]
+
+
+# ---------------------------------------------------------------------------
+# masked-population regressions (post-merge bias fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_excludes_masked_clients():
+    """Masked clients must NOT vote a literal 0 inside the kept window.
+    Live deltas {1, 2, 3} with trim=1 keep exactly {2}; the old masked
+    zeros sorted into the window and dragged the mean to 1.0."""
+    rows = [[1.0], [2.0], [3.0], [100.0], [-100.0]]
+    part = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    out = aggregate_trimmed(_dx(np.asarray(rows) * np.asarray(part)[:, None]),
+                            part, trim=1)
+    np.testing.assert_allclose(float(out["w"][0]), 2.0, atol=1e-6)
+
+
+def test_trimmed_hand_computed_masked_case():
+    """Regression vs a hand-computed case, two coordinates: live values
+    per coordinate sorted, trim one from each end, mean the rest —
+    renormalized over the actually-kept count (not the static K-2)."""
+    rows = np.asarray(
+        [[1.0, -4.0], [5.0, 0.0], [3.0, 2.0], [9.0, 8.0], [0.0, 0.0]],
+        np.float32,
+    )
+    part = jnp.asarray([1.0, 1.0, 1.0, 1.0, 0.0])  # client 4 masked
+    out = aggregate_trimmed(_dx(rows * np.asarray(part)[:, None]),
+                            part, trim=1)
+    # live col0 sorted [1,3,5,9] -> keep [3,5] -> 4; col1 [-4,0,2,8] -> 1
+    np.testing.assert_allclose(np.asarray(out["w"]), [4.0, 1.0], atol=1e-6)
+
+
+def test_trimmed_full_participation_matches_static_window():
+    """With everyone live the fix is the classic static window —
+    numerically identical to sorting and slicing [trim, K-trim)."""
+    rng = np.random.default_rng(3)
+    rows = rng.normal(size=(7, 5)).astype(np.float32)
+    out = aggregate_trimmed(_dx(rows), jnp.ones(7), trim=2)
+    ref = np.sort(rows, axis=0)[2:5].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), ref, rtol=1e-6)
+
+
+def test_trimmed_tiny_live_population_keeps_a_live_value():
+    """live <= 2*trim: the clamped window still keeps a LIVE value —
+    never an inf sentinel, never a masked zero."""
+    rows = np.asarray([[5.0], [7.0], [0.0], [0.0], [0.0]], np.float32)
+    part = jnp.asarray([1.0, 1.0, 0.0, 0.0, 0.0])
+    out = aggregate_trimmed(_dx(rows), part, trim=1)
+    v = float(out["w"][0])
+    assert np.isfinite(v) and v in (5.0, 7.0)
+    # nobody live at all: "no change", not a sentinel
+    out0 = aggregate_trimmed(_dx(rows), jnp.zeros(5), trim=1)
+    assert float(out0["w"][0]) == 0.0
+
+
+def test_krum_neighbourhood_follows_live_population():
+    """Post-merge regression: live population 3 with the static f=1 window
+    (K - f - 2 = 5 of 8) used to sum 1e30 sentinels into every score,
+    tying all candidates and degenerating the argmin to the lowest live
+    id — here the outlier. The clamped neighbourhood selects from the
+    honest cluster."""
+    rows = np.zeros((8, 2), np.float32)
+    rows[0] = [50.0, -50.0]                 # lowest-id live = the outlier
+    rows[3] = [1.0, 1.0]
+    rows[6] = [1.1, 0.9]
+    part = jnp.asarray([1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0])
+    out = aggregate_krum(_dx(rows), part, f=1)
+    assert abs(float(out["w"][0])) < 2.0    # a cluster member, not row 0
+
+
+def test_krum_post_merge_round_integration():
+    """A krum round AFTER a merge shrank the population: the attacker
+    (lowest live id, crafted outlier delta) must not be auto-selected."""
+    from repro.core.scaffold import AlgoConfig, make_round_fn
+
+    NK, DIM = 8, 4
+    rng = np.random.default_rng(1)
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    w_true = rng.normal(size=DIM).astype(np.float32)
+    xs = rng.normal(size=(NK, 3, 8, DIM)).astype(np.float32)
+    ys = np.einsum("ksbd,d->ksb", xs, w_true).astype(np.float32)
+    # post-merge population: only 0, 3, 6 live; client 0 sign-flips hard
+    active = jnp.asarray([1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0])
+    poison = jnp.asarray([-20.0] + [1.0] * (NK - 1))
+    algo = AlgoConfig(algorithm="fedavg", lr_local=0.1, aggregator="krum",
+                      trim=1)
+    rf = jax.jit(make_round_fn(loss, algo))
+    x = {"w": jnp.zeros(DIM)}
+    from repro.core.scaffold import init_controls
+    c_g, c_l = init_controls(x, NK)
+    for _ in range(8):
+        x, c_g, c_l, _, _ = rf(
+            x, c_g, c_l, {"x": jnp.asarray(xs), "y": jnp.asarray(ys)},
+            jnp.ones((NK, 3)), jnp.ones(NK), active, jnp.ones(NK), poison,
+        )
+    # krum follows the honest pair toward w_true instead of the flipped
+    # outlier (pre-fix this diverged: every score tied at ~5e30)
+    assert float(jnp.linalg.norm(x["w"] - w_true)) < 1.0
+
+
+def test_krum_full_participation_matches_static_reference():
+    """All live: the clamped m equals the classic K - f - 2 and selection
+    matches a direct numpy reference."""
+    rng = np.random.default_rng(7)
+    rows = rng.normal(size=(6, 3)).astype(np.float32)
+    f = 1
+    out = aggregate_krum(_dx(rows), jnp.ones(6), f=f)
+    d2 = ((rows[:, None, :] - rows[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    m = 6 - f - 2
+    scores = np.sort(d2, axis=1)[:, :m].sum(axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out["w"]), rows[int(np.argmin(scores))], rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# robustness property: sign-flip colluders cannot drag median/trimmed
+# outside the honest envelope (hypothesis; deterministic fallback shim)
+# ---------------------------------------------------------------------------
+
+from _hyp import given, settings, st  # noqa: E402
+from repro.core.robust_agg import aggregate  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(min_value=3, max_value=9),
+    f_seed=st.integers(min_value=0, max_value=10_000),
+    scale=st.floats(min_value=1.0, max_value=100.0),
+)
+def test_median_trimmed_stay_in_honest_range_under_sign_flip(k, f_seed,
+                                                             scale):
+    """For ANY f < K/2 sign-flip attackers under full participation,
+    coordinate-wise median and trimmed mean (trim=f) stay within the
+    honest clients' coordinate-wise [min, max] envelope: at most f values
+    can sit below (or above) the honest extremes, so positions
+    [f, K-f) of every coordinate's sort — everything both aggregators
+    read — are honest-bounded."""
+    rng = np.random.default_rng(f_seed)
+    f = int(rng.integers(1, (k - 1) // 2 + 1)) if k >= 3 else 1
+    honest = rng.normal(size=(k - f, 4)).astype(np.float32)
+    attack = (-scale * honest.mean(axis=0, keepdims=True)
+              * np.ones((f, 1), np.float32))
+    rows = np.concatenate([honest, attack]).astype(np.float32)
+    perm = rng.permutation(k)          # attacker position must not matter
+    dx = _dx(rows[perm])
+    part = jnp.ones(k)
+    lo = honest.min(axis=0) - 1e-5
+    hi = honest.max(axis=0) + 1e-5
+    for name in ("median", "trimmed"):
+        out = aggregate(name, dx, jnp.full(k, 1.0 / k), part, trim=f)
+        v = np.asarray(out["w"])
+        assert np.all(v >= lo) and np.all(v <= hi), (
+            f"{name} left the honest envelope: {v} not in [{lo}, {hi}]"
+        )
