@@ -82,10 +82,34 @@ def base_spec(**kw) -> ExperimentSpec:
     return ExperimentSpec(**base)
 
 
-def cell_spec(scenario_key: str, policy: str, agg: str) -> ExperimentSpec:
+def cnn_base_spec(**kw) -> ExperimentSpec:
+    """The paper-model cell: CNN on synthetic MNIST, sized for a 2-seed
+    smoke (one merge, 4 rounds) — proves the whole harness path (paired
+    runs, infiltration counting, per-client accuracy) on the conv
+    stack, not just the linear toy."""
+    base = dict(
+        model="cnn_mnist",
+        dataset="synthetic_mnist",
+        n_train=800,
+        n_test=128,
+        num_clients=K,
+        partition="noniid_classes",
+        merge_at=(2,),
+        threshold=0.5,
+        rounds=4,
+        local_epochs=1,
+        steps_per_epoch=2,
+        batch_size=8,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def cell_spec(scenario_key: str, policy: str, agg: str,
+              base=base_spec) -> ExperimentSpec:
     name, kwargs = SCENARIOS[scenario_key]
-    return base_spec(scenario=name, scenario_kwargs=dict(kwargs),
-                     merge_policy=policy, aggregator=agg)
+    return base(scenario=name, scenario_kwargs=dict(kwargs),
+                merge_policy=policy, aggregator=agg)
 
 
 def _cmp_json(c: PairedComparison) -> dict:
@@ -100,21 +124,22 @@ def _cmp_json(c: PairedComparison) -> dict:
 
 
 def evaluate(scenario_keys, policies, aggregators, seeds,
-             cache: RunCache) -> dict:
+             cache: RunCache, base=base_spec) -> dict:
     """Run the grid; every attack cell pairs against the clean cell of
     the SAME (policy, aggregator) combo on the same seeds."""
     cells = []
     for pol in policies:
         for agg in aggregators:
-            clean = cell_spec("clean", pol, agg)
+            clean = cell_spec("clean", pol, agg, base)
             for sc in scenario_keys:
-                spec = cell_spec(sc, pol, agg)
+                spec = cell_spec(sc, pol, agg, base)
                 runs = cell_runs(cache, spec, seeds)
                 finals = [r.final_accuracy for r in runs]
                 mean_acc, acc_lo, acc_hi = paired_ci(finals)
                 pc = np.asarray([r.per_client_accuracy for r in runs])
                 cell = {
                     "scenario": sc,
+                    "model": spec.model,
                     "merge_policy": pol,
                     "aggregator": agg,
                     "seeds": list(map(int, seeds)),
@@ -217,6 +242,10 @@ def run(seeds=None, smoke: bool = False, out: str = "BENCH_robustness.json"):
     cache = RunCache()
     t0 = time.time()
     cells = evaluate(scenario_keys, policies, aggregators, seeds, cache)
+    # paper-model smoke cell: the SAME harness machinery on the CNN /
+    # synthetic-MNIST stack, 2 paired seeds, clean vs mimic
+    cnn_cells = evaluate(("clean", "pearson_mimic"), ("pearson",), ("mean",),
+                         seeds[:2], cache, base=cnn_base_spec)
     report = {
         "benchmark": "robustness_harness",
         "smoke": smoke,
@@ -230,13 +259,14 @@ def run(seeds=None, smoke: bool = False, out: str = "BENCH_robustness.json"):
         "runs_executed": len(cache),
         "wall_s": round(time.time() - t0, 2),
         "cells": cells,
+        "cnn_cells": cnn_cells,
         "acceptance": acceptance(cells, cache, seeds),
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
-    print(f"[robustness_harness] {len(cells)} cells, {len(cache)} runs, "
-          f"{report['wall_s']}s -> {out}")
-    for c in cells:
+    print(f"[robustness_harness] {len(cells)}+{len(cnn_cells)}cnn cells, "
+          f"{len(cache)} runs, {report['wall_s']}s -> {out}")
+    for c in cells + cnn_cells:
         tag = f"{c['scenario']:19s} {c['merge_policy']:8s} {c['aggregator']:8s}"
         extra = ""
         if "degradation_vs_clean" in c:

@@ -1,0 +1,176 @@
+"""Population scale: engine rounds/sec and merge-round wall time at
+K = 10 / 1024 / 10,000 (DESIGN.md §9).
+
+Grid (linear model on blobs, tiny per-client shards so the population
+axis — not the data — is what scales):
+
+  flat ``pearson``           at K = 10 and 1024 — the O(K^2) similarity +
+                             O(K)-iteration greedy plan baseline
+  ``pearson-blocked``        at K = 10, 1024 and 10,000 — blocked
+                             hierarchical planning (block_size=128) over
+                             sketched similarity (sketch_dim=64; K=10
+                             runs sketch_dim=0 so the block_size >= K
+                             configuration must reproduce the flat
+                             policy's RoundRecord history bit for bit,
+                             which this benchmark asserts and records)
+
+Protocol per cell (mirrors benchmarks/engine_rounds.py): one cold engine
+run (includes compiling the scan segments and the fused merge program),
+then a warm run on a fresh simulator reusing the first engine's compiled
+programs. ``merge_round_wall_ms`` is the warm run's RoundRecord wall on
+the merge round — train + similarity + plan + mix + decode + shard
+bookkeeping + eval, everything the merge boundary costs.
+
+Updates the ``scale_rounds`` section of ``BENCH_merge.json`` in place.
+
+  PYTHONPATH=src python -m benchmarks.scale_rounds             # full grid
+  PYTHONPATH=src python -m benchmarks.scale_rounds --max-k 1024
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.engine import RoundEngine
+from repro.launch.experiment import ExperimentSpec, build_simulator
+
+N_PER = 8          # samples per client: population scales, data per client not
+ROUNDS = 4
+MERGE_AT = (2,)
+
+
+def make_spec(K: int, policy: str, block_size: int = 0,
+              sketch_dim: int = 0) -> ExperimentSpec:
+    return ExperimentSpec(
+        model="linear",
+        dataset="blobs",
+        n_train=K * N_PER,
+        n_test=256,
+        data_kwargs={"num_classes": 4, "dim": 8},
+        partition="class_pairs",
+        partition_kwargs={"n_per": N_PER},
+        num_clients=K,
+        lr_local=0.1,
+        merge_policy=policy,
+        merge_at=MERGE_AT,
+        threshold=0.5,
+        rounds=ROUNDS,
+        local_epochs=1,
+        steps_per_epoch=2,
+        batch_size=4,
+        block_size=block_size,
+        sketch_dim=sketch_dim,
+        pipeline="engine",
+    )
+
+
+def hist_key(hist):
+    """Everything a RoundRecord says, rounded nowhere — the bit-for-bit
+    comparison key for the K=10 blocked == flat guarantee."""
+    return [
+        (r.round, r.accuracy, r.mean_loss, r.active_nodes, r.updates_sent,
+         r.bytes_sent, r.active_nodes_end, r.merged_groups)
+        for r in hist
+    ]
+
+
+def run_cell(spec: ExperimentSpec) -> dict:
+    sim_c = build_simulator(spec)
+    eng_c = RoundEngine(sim_c)
+    t0 = time.perf_counter()
+    eng_c.run()
+    cold_s = time.perf_counter() - t0
+
+    sim_w = build_simulator(spec)
+    eng_w = RoundEngine(sim_w, programs=eng_c.programs)
+    t0 = time.perf_counter()
+    hist = eng_w.run()
+    warm_s = time.perf_counter() - t0
+
+    round_ms = warm_s / spec.rounds * 1e3
+    merge_ms = float(np.mean(
+        [r.wall_s for r in hist if r.merged_groups or r.round in MERGE_AT]
+    ) * 1e3)
+    return {
+        "K": spec.num_clients,
+        "policy": spec.merge_policy,
+        "block_size": spec.block_size,
+        "sketch_dim": spec.sketch_dim,
+        "rounds": spec.rounds,
+        "engine_cold_s": round(cold_s, 2),
+        "engine_warm_s": round(warm_s, 3),
+        "engine_round_ms": round(round_ms, 2),
+        "merge_round_wall_ms": round(merge_ms, 2),
+        "rounds_per_sec": round(1e3 / round_ms, 3),
+        "merged_groups": int(sum(len(r.merged_groups) for r in hist)),
+        "_hist": hist,
+    }
+
+
+def run(out_path: str = "BENCH_merge.json", max_k: int = 10_000):
+    cells = [
+        ("flat", make_spec(10, "pearson")),
+        ("blocked", make_spec(10, "pearson-blocked", block_size=128,
+                              sketch_dim=0)),
+        ("flat", make_spec(1024, "pearson")),
+        ("blocked", make_spec(1024, "pearson-blocked", block_size=128,
+                              sketch_dim=64)),
+        ("blocked", make_spec(10_000, "pearson-blocked", block_size=128,
+                              sketch_dim=64)),
+    ]
+    results = []
+    for tag, spec in cells:
+        if spec.num_clients > max_k:
+            print(f"skip {tag} K={spec.num_clients} (> --max-k {max_k})")
+            continue
+        r = run_cell(spec)
+        results.append(r)
+        print(f"{tag:8s} K={r['K']:6d} round={r['engine_round_ms']:9.2f}ms "
+              f"merge_round={r['merge_round_wall_ms']:9.2f}ms "
+              f"cold={r['engine_cold_s']:.1f}s groups={r['merged_groups']}",
+              flush=True)
+
+    def find(K, policy):
+        for r in results:
+            if r["K"] == K and r["policy"] == policy:
+                return r
+        return None
+
+    summary = {}
+    f10, b10 = find(10, "pearson"), find(10, "pearson-blocked")
+    if f10 and b10:
+        summary["k10_history_bit_for_bit"] = (
+            hist_key(f10["_hist"]) == hist_key(b10["_hist"])
+        )
+    f1k, b1k = find(1024, "pearson"), find(1024, "pearson-blocked")
+    if f1k and b1k:
+        summary["k1024_merge_speedup_blocked_vs_flat"] = round(
+            f1k["merge_round_wall_ms"] / b1k["merge_round_wall_ms"], 2
+        )
+    for r in results:
+        r.pop("_hist")
+
+    bench = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            bench = json.load(f)
+    bench["scale_rounds"] = {"cells": results, **summary}
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    for k, v in summary.items():
+        print(f"{k},{v}")
+    print(f"-> {out_path}")
+    return bench["scale_rounds"]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_merge.json")
+    ap.add_argument("--max-k", type=int, default=10_000,
+                    help="skip cells above this K (CI smoke uses 1024)")
+    args = ap.parse_args()
+    run(args.out, args.max_k)

@@ -56,15 +56,21 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding as SH
-from repro.core.federation import RoundRecord, _gather_batches
+from repro.core.federation import (
+    RoundRecord,
+    _gather_batches,
+    participation_mask,
+)
 from repro.core.merge_policy import MergePolicy
 from repro.core.merging import (
     apply_merge_device,
+    compose_cross_groups,
     device_merge_plan,
     groups_from_assignment,
     mix_stacked_tree,
     plan_from_groups,
 )
+from repro.core.pearson import pearson_sketch_rows
 from repro.core.adversary import make_context
 from repro.core.scaffold import make_aggregate_fn, make_round_fn, make_train_fn
 from repro.core.scenarios import round_tables
@@ -87,12 +93,6 @@ class RoundEngine:
         fl = sim.fl
         if fl.pipeline != "engine":
             raise ValueError("RoundEngine requires FLConfig.pipeline='engine'")
-        if fl.participation < 1.0:
-            raise ValueError(
-                "engine pipeline requires full participation "
-                "(participation=1.0): per-round participation sampling is "
-                "host randomness that cannot be pre-drawn shape-statically"
-            )
         if fl.engine_max_segment < 1:
             raise ValueError("engine_max_segment must be >= 1")
         self.sim = sim
@@ -103,6 +103,8 @@ class RoundEngine:
             sim.scenario, sim.K, fl.num_rounds, fl.steps_per_epoch,
             fl.local_steps,
             loss_sched=sim._loss_sched, delay_sched=sim._delay_sched,
+            part_u=(sim.participation_table()
+                    if fl.participation < 1.0 else None),
         )
         maxd = int(self.tables.delay.max()) if self.tables.delay.size else 0
         self._has_delay = maxd > 0
@@ -119,6 +121,18 @@ class RoundEngine:
             type(pol).plan is MergePolicy.plan
             and callable(getattr(pol, "device_similarity", None))
         )
+        # blocked hierarchical planning (pearson-blocked, DESIGN.md §9):
+        # per-block on-device plans + a representative cross pass, so no
+        # K x K object exists at any layer. A single exact block IS the
+        # flat fused merge program — route it there, which also makes the
+        # paper-scale (block_size >= K, sketch_dim = 0) configuration
+        # reproduce the flat policy's history bit for bit.
+        self._blocked = bool(getattr(pol, "blocked", False))
+        if self._blocked:
+            self._B = pol.effective_block_size(sim.K)
+            self._nb = -(-sim.K // self._B)
+            if self._nb == 1 and fl.sketch_dim == 0:
+                self._blocked = False
         self.programs = programs if programs is not None else self._build_programs()
 
     # ------------------------------------------------------------------
@@ -275,6 +289,114 @@ class RoundEngine:
             state, x_locals, losses = core(state, const, xrow)
             return state, losses, x_locals
 
+        merge_blocked = None
+        if getattr(self, "_blocked", False):
+            Bb, nb = self._B, self._nb
+            K = sim.K
+            Kp = nb * Bb
+            pad = Kp - K
+            d_sk = fl.sketch_dim
+            sk_mode = fl.sketch_mode
+
+            def _pad_rows(a):
+                # padded clients are permanently inactive: zero sketch rows
+                # (zero variance -> correlation 0 via the eps guard) and
+                # active=0, so the per-block planner never touches them
+                if pad == 0:
+                    return a
+                return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+            def merge_blocked(state, const, xrow):
+                """Fused blocked merge round (tentpole layer 3): train +
+                sketch + vmapped per-block on-device planning + blockwise
+                W-mix + representative cross pass, all fixed-shape
+                (nb, B, B) — the dense K x K merge matrix of the flat
+                program never exists. Only the per-block assignments and
+                the (nb, nb) cross assignment go to host (O(K * B))."""
+                state, x_locals, losses = core(state, const, xrow)
+                params, c_g, c_l, weights, active, *rest = state
+                act_b = _pad_rows(active).reshape(nb, Bb)
+                w_b = _pad_rows(weights).reshape(nb, Bb)
+                if d_sk > 0:
+                    rows_b = _pad_rows(pol.device_sketch(x_locals)) \
+                        .reshape(nb, Bb, -1)
+                    corr_b = jax.vmap(
+                        lambda r: pearson_sketch_rows(r, mode=sk_mode)
+                    )(rows_b)
+                else:
+                    # exact similarity (documented O(K^2)) — the small-K /
+                    # bit-parity configuration
+                    corr_p = jnp.pad(
+                        pol.device_similarity(x_locals),
+                        ((0, pad), (0, pad)),
+                    )
+                    corr_b = jnp.stack([
+                        corr_p[i * Bb:(i + 1) * Bb, i * Bb:(i + 1) * Bb]
+                        for i in range(nb)
+                    ])
+                W1, A1, act1 = jax.vmap(
+                    lambda c, a, w: device_merge_plan(
+                        c, a, w, threshold=thr, max_group_size=G, alpha=alpha
+                    )
+                )(corr_b, act_b, w_b)
+                # same "skip the apply on empty plans" guard as the flat
+                # program: identity-mix (bit-exact no-op) if nothing grouped
+                has1 = jnp.any(jnp.sum(A1, axis=2) > 1.5)
+                W1e = jnp.where(has1, W1, jnp.eye(Bb, dtype=W1.dtype)[None])
+
+                def _mix1(leaf):
+                    lf = _pad_rows(leaf).reshape((nb, Bb) + leaf.shape[1:])
+                    mixed = jnp.einsum(
+                        "nij,nj...->ni...", W1e, lf.astype(jnp.float32)
+                    )
+                    return mixed.reshape((Kp,) + leaf.shape[1:])[:K] \
+                        .astype(leaf.dtype)
+
+                c_l = jax.tree_util.tree_map(_mix1, c_l)
+                w1 = jnp.where(
+                    has1, jnp.einsum("nij,nj->ni", A1, w_b), w_b
+                ).reshape(Kp)
+                # ---- cross pass over one designated rep per block: the
+                # lowest-index post-pass-1 active node
+                rep_loc = jnp.argmax(act1 > 0, axis=1)
+                has_rep = jnp.any(act1 > 0, axis=1)
+                rep_glob = rep_loc + Bb * jnp.arange(nb)
+                if d_sk > 0:
+                    corr_r = pearson_sketch_rows(
+                        jnp.take(rows_b.reshape(Kp, -1), rep_glob, axis=0),
+                        mode=sk_mode,
+                    )
+                else:
+                    corr_r = corr_p[rep_glob[:, None], rep_glob[None, :]]
+                w_r = jnp.take(w1, rep_glob)
+                W2, A2, act2 = device_merge_plan(
+                    corr_r, has_rep.astype(jnp.float32), w_r,
+                    threshold=thr, max_group_size=G, alpha=alpha,
+                )
+                has2 = jnp.any(jnp.sum(A2, axis=1) > 1.5)
+                W2e = jnp.where(has2, W2, jnp.eye(nb, dtype=W2.dtype))
+
+                def _mix2(leaf):
+                    lf = _pad_rows(leaf).astype(jnp.float32)
+                    rep_vals = jnp.take(lf, rep_glob, axis=0)
+                    mixed = jnp.tensordot(W2e, rep_vals, axes=1)
+                    sel = has_rep.reshape((nb,) + (1,) * (lf.ndim - 1))
+                    # repless blocks scatter their own value back (no-op)
+                    out = lf.at[rep_glob].set(jnp.where(sel, mixed, rep_vals))
+                    return out[:K].astype(leaf.dtype)
+
+                c_l = jax.tree_util.tree_map(_mix2, c_l)
+                w2_r = jnp.where(has2, A2 @ w_r, w_r)
+                weights = w1.at[rep_glob].set(
+                    jnp.where(has_rep, w2_r, w_r)
+                )[:K]
+                act1f = act1.reshape(Kp)
+                act_new = act1f.at[rep_glob].set(
+                    jnp.where(has_rep, act2, jnp.take(act1f, rep_glob))
+                )[:K]
+                state = (params, c_g, c_l, weights, act_new, *rest)
+                return state, losses, A1, act1, A2, act2, rep_glob, has_rep
+
         if mesh is not None:
             rep_tree = jax.tree_util.tree_map(lambda _: rep, sim.params)
             stacked_tree = SH.client_stack_shardings(mesh, sim.c_locals)
@@ -290,11 +412,19 @@ class RoundEngine:
                             out_shardings=(state_sh, rep, rep, rep))
             m_host = jax.jit(merge_host, donate_argnums=(0,),
                              out_shardings=(state_sh, rep, stacked_tree))
+            m_blk = merge_blocked and jax.jit(
+                merge_blocked, donate_argnums=(0,),
+                out_shardings=(state_sh,) + (rep,) * 7,
+            )
         else:
             seg = jax.jit(segment, donate_argnums=(0,))
             m_dev = jax.jit(merge_device, donate_argnums=(0,))
             m_host = jax.jit(merge_host, donate_argnums=(0,))
-        return {"segment": seg, "merge_device": m_dev, "merge_host": m_host}
+            m_blk = merge_blocked and jax.jit(
+                merge_blocked, donate_argnums=(0,)
+            )
+        return {"segment": seg, "merge_device": m_dev,
+                "merge_host": m_host, "merge_blocked": m_blk}
 
     # ------------------------------------------------------------------
     def _init_state(self):
@@ -328,41 +458,61 @@ class RoundEngine:
             sim._batch_key, jnp.asarray(self.tables.poison),
         )
 
-    def _xs(self, t0: int, t1: int):
+    def _effective_masks(self, t0: int, t1: int, active) -> np.ndarray:
+        """(t1-t0, K) round masks with partial participation folded in.
+        The active set is constant between merge boundaries, so every
+        round's participant subset (the k smallest pre-drawn uniforms
+        among active clients) is computable on host at segment dispatch —
+        the one shared selection rule (``participation_mask``) keeps the
+        engine and the per-round loop on identical subsets."""
+        rows = np.asarray(self.tables.round_mask[t0:t1])
+        if self.tables.part_u is None:
+            return rows
+        rows = rows.copy()
+        for i, t in enumerate(range(t0, t1)):
+            rows[i] *= participation_mask(
+                self.tables.part_u[t], active, self.fl.participation
+            )
+        return rows
+
+    def _xs(self, t0: int, t1: int, round_mask: np.ndarray):
         tb = self.tables
         return {
             "t": jnp.arange(t0, t1, dtype=jnp.int32),
             "steps_mask": jnp.asarray(tb.steps_mask[t0:t1]),
-            "round_mask": jnp.asarray(tb.round_mask[t0:t1]),
+            "round_mask": jnp.asarray(round_mask),
             "delay": jnp.asarray(tb.delay[t0:t1]),
         }
 
-    def _xrow(self, t: int):
-        return {k: v[0] for k, v in self._xs(t, t + 1).items()}
+    def _xrow(self, t: int, round_mask: np.ndarray):
+        return {k: v[0] for k, v in self._xs(t, t + 1, round_mask).items()}
 
     # ------------------------------------------------------------------
     def _record(self, t: int, accuracy: float, losses_np, active_pre,
-                merged_groups=(), wall_s: float = 0.0):
+                round_mask, merged_groups=(), wall_s: float = 0.0):
         """Round accounting through the simulator's single shared helper
         (same formulas as the per-round loop by construction)."""
         return self.sim._round_record(
-            t, accuracy, losses_np, active_pre, self.tables.round_mask[t],
+            t, accuracy, losses_np, active_pre, round_mask,
             merged_groups, wall_s,
         )
 
     def _run_segment(self, state, t0: int, t1: int, verbose: bool):
         sim = self.sim
+        active_pre = sim.active.copy()
+        eff_mask = self._effective_masks(t0, t1, active_pre)
         wall0 = time.time()
         state, (p_stack, l_stack) = self.programs["segment"](
-            state, self._const(), self._xs(t0, t1)
+            state, self._const(), self._xs(t0, t1, eff_mask)
         )
         losses_np = np.asarray(l_stack)
         wall = (time.time() - wall0) / (t1 - t0)
-        active_pre = sim.active.copy()
         for i, t in enumerate(range(t0, t1)):
             params_t = jax.tree_util.tree_map(lambda l: l[i], p_stack)
             acc = float(sim.eval_fn(params_t))
-            rec = self._record(t, acc, losses_np[i], active_pre, (), wall)
+            rec = self._record(
+                t, acc, losses_np[i], active_pre, eff_mask[i], (), wall
+            )
             sim.history.append(rec)
             if verbose:
                 print(
@@ -371,13 +521,53 @@ class RoundEngine:
                 )
         return state
 
+    def _decode_blocked(self, A1, act1, A2, act2, rep_glob):
+        """Decode the blocked program's per-block + cross assignments into
+        a host MergePlan for the shard bookkeeping. O(K * B) host work,
+        and ``with_w=False`` — the mixes already happened on device, so no
+        dense K x K matrix is ever built."""
+        sim, fl = self.sim, self.fl
+        B, K = self._B, sim.K
+        A1, act1 = np.asarray(A1), np.asarray(act1)
+        pass1_groups, pass1_unmerged = [], []
+        for b in range(self._nb):
+            g, u = groups_from_assignment(A1[b], act1[b])
+            # padded clients are never active, so only real ids appear
+            pass1_groups.extend([j + b * B for j in grp] for grp in g)
+            pass1_unmerged.extend(j + b * B for j in u)
+        g2, _ = groups_from_assignment(np.asarray(A2), np.asarray(act2))
+        if g2:
+            groups, unmerged = compose_cross_groups(
+                pass1_groups, pass1_unmerged, np.asarray(rep_glob), g2
+            )
+        else:
+            groups, unmerged = pass1_groups, pass1_unmerged
+        return plan_from_groups(
+            K, groups, unmerged, sim.weights.astype(np.int64),
+            alpha=fl.alpha, with_w=False,
+        )
+
     def _run_merge_round(self, state, t: int, verbose: bool):
         sim, fl = self.sim, self.fl
         active_pre = sim.active.copy()
+        eff_mask = self._effective_masks(t, t + 1, active_pre)
+        xrow = self._xrow(t, eff_mask)
         wall0 = time.time()
-        if self._device_plan:
+        if self._blocked:
+            (state, losses, A1, act1, A2, act2, rep_glob, has_rep) = \
+                self.programs["merge_blocked"](state, self._const(), xrow)
+            plan = self._decode_blocked(A1, act1, A2, act2, rep_glob)
+            sim.merge_plan = plan
+            if plan.groups:
+                # controls, weights AND active were advanced on device with
+                # fixed-shape per-block matrices; the host shell only moves
+                # shard rows and refreshes the flat row buffers (O(K))
+                sim._merge_bookkeeping(plan)
+            else:
+                sim.active = plan.active.astype(np.float32)
+        elif self._device_plan:
             state, losses, A, act_new = self.programs["merge_device"](
-                state, self._const(), self._xrow(t)
+                state, self._const(), xrow
             )
             groups, unmerged = groups_from_assignment(
                 np.asarray(A), np.asarray(act_new)
@@ -396,10 +586,9 @@ class RoundEngine:
                 sim.active = plan.active.astype(np.float32)
         else:
             state, losses, x_locals = self.programs["merge_host"](
-                state, self._const(), self._xrow(t)
+                state, self._const(), xrow
             )
-            sim_matrix = sim.policy.similarity(x_locals)
-            plan = sim.policy.plan(sim_matrix, sim.weights, sim.active)
+            plan = sim.policy.merge_plan(x_locals, sim.weights, sim.active)
             sim.merge_plan = plan
 
             def _rep(a):
@@ -428,7 +617,8 @@ class RoundEngine:
         acc = float(sim.eval_fn(state[0]))
         wall = time.time() - wall0
         rec = self._record(
-            t, acc, np.asarray(losses), active_pre, plan.groups, wall
+            t, acc, np.asarray(losses), active_pre, eff_mask[0],
+            plan.groups, wall
         )
         sim.history.append(rec)
         if verbose:

@@ -83,6 +83,17 @@ class FLConfig:
     # constant-initialized leaves that inflate cross-client correlation
     corr_sample: int = 0
     corr_exclude_constant: bool = False
+    # population scale (merge_policy="pearson-blocked", DESIGN.md §9):
+    # plan within fixed-size blocks of consecutive clients, then across
+    # block representatives (0 = one block, the flat paper planner) ...
+    block_size: int = 0
+    # ... over a d-dimensional per-client similarity sketch
+    # (core/pearson.sketch_tree; 0 = exact streaming tree-Pearson). The
+    # concentration knob: estimate error is O(1/sqrt(sketch_dim)).
+    sketch_dim: int = 0
+    # "subsample" (exact Pearson over d sampled coordinates) or "project"
+    # (Gaussian random projection of the centered rows, cosine estimator)
+    sketch_mode: str = "subsample"
     # DEPRECATED aliases for merge_at, kept as accepted kwargs: the single
     # first merge round plus the tuple of re-merge rounds. They are left
     # exactly as passed (None when unset) — merge_at is the one field to
@@ -412,6 +423,20 @@ class FederatedSimulator:
             ys.append(y[idx])
         return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
 
+    def participation_table(self) -> np.ndarray:
+        """(T, K) pre-drawn participation uniforms — the simulator's own
+        seeded stream, drawn lazily (configs may be replaced after
+        construction in tests) and ONCE: the per-round device loop and the
+        compiled engine select identical participants from identical draws
+        by construction. A dedicated child stream keeps the draw order
+        independent of pipeline-specific ``self.rng`` consumption."""
+        if getattr(self, "_part_u", None) is None:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.fl.seed, 0x9A57])
+            )
+            self._part_u = rng.random((self.fl.num_rounds, self.K))
+        return self._part_u
+
     def _round_masks(self, t: int):
         S = self.fl.local_steps
         steps_mask = np.ones((self.K, S), np.float32)
@@ -427,14 +452,14 @@ class FederatedSimulator:
                 steps_mask[hit, self.fl.steps_per_epoch :] = 0.0
         # delayed clients are excluded now; their delta arrives later
         round_mask[self._delay_sched[t] > 0] = 0.0
-        # partial participation: sample a subset of active clients
+        # partial participation: sample a subset of active clients via the
+        # pre-drawn uniform table (shared with the engine pipeline, which
+        # consumes the SAME draws — see participation_mask)
         if self.fl.participation < 1.0:
-            act = np.flatnonzero(self.active > 0)
-            k = max(1, int(round(self.fl.participation * len(act))))
-            chosen = self.rng.choice(act, size=k, replace=False)
-            sampled = np.zeros(self.K, np.float32)
-            sampled[chosen] = 1.0
-            round_mask *= sampled
+            round_mask *= participation_mask(
+                self.participation_table()[t], self.active,
+                self.fl.participation,
+            )
         poison = np.ones(self.K, np.float32)
         for cid, factor in self.scenario.model_poison.items():
             poison[cid] = factor
@@ -489,8 +514,7 @@ class FederatedSimulator:
         apply its plan: mix control state, move merged members' data rows
         to the representative, update weights and the active mask. The
         policy decides WHO merges; everything here is bookkeeping."""
-        sim_matrix = self.policy.similarity(x_locals)
-        plan = self.policy.plan(sim_matrix, self.weights, self.active)
+        plan = self.policy.merge_plan(x_locals, self.weights, self.active)
         self.merge_plan = plan
         if not plan.groups:
             # identity plan (e.g. policy "none", or nothing above
@@ -721,6 +745,24 @@ class FederatedSimulator:
                     + (f" merged={merged}" if merged else "")
                 )
         return self.history
+
+
+def participation_mask(u_row: np.ndarray, active: np.ndarray,
+                       participation: float) -> np.ndarray:
+    """(K,) f32 participant mask from one pre-drawn uniform row: the
+    ``k = max(1, round(p * n_active))`` active clients with the SMALLEST
+    uniforms participate (a threshold rule over pre-drawn randomness, so
+    the compiled engine and the per-round loop — which see the evolving
+    active mask at different times — select identical subsets from the
+    same table). Ties have probability zero under continuous draws."""
+    act = np.asarray(active) > 0
+    n_act = int(act.sum())
+    if n_act == 0:
+        return np.ones_like(u_row, np.float32)
+    k = max(1, int(round(participation * n_act)))
+    u = np.where(act, u_row, np.inf)
+    thr = np.partition(u, k - 1)[k - 1]
+    return (u <= thr).astype(np.float32)
 
 
 def _gather_batches(key, xs, ys, offsets, lengths, steps: int, batch: int):

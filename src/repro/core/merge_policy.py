@@ -30,11 +30,18 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.merging import MergePlan, build_merge_plan, plan_from_groups
+from repro.core.merging import (
+    MergePlan,
+    blocked_merge_plan,
+    build_merge_plan,
+    plan_from_groups,
+)
 from repro.core.pearson import (
     client_param_matrix,
     pearson_matrix,
+    pearson_sketch_rows,
     pearson_tree,
+    sketch_tree,
     subsample_columns,
 )
 from repro.utils.registry import Registry
@@ -62,6 +69,14 @@ class MergePolicy:
             active=active.astype(bool),
             alpha=self.fl.alpha,
         )
+
+    def merge_plan(self, x_locals, weights: np.ndarray,
+                   active: np.ndarray) -> MergePlan:
+        """The simulator's one merge-round entry point: local models in,
+        MergePlan out. The base route materializes the full similarity
+        matrix and runs the flat greedy plan; scale-aware policies
+        (pearson-blocked) override it to never touch a K x K object."""
+        return self.plan(self.similarity(x_locals), weights, active)
 
     # ---- shared helper ---------------------------------------------------
     def _materialized_matrix(self, x_locals) -> jnp.ndarray:
@@ -107,6 +122,69 @@ class PearsonPolicy(MergePolicy):
             return np.asarray(pearson_matrix_fast(
                 jnp.asarray(X), interpret=self.fl.pearson_interpret))
         return np.asarray(pearson_matrix(jnp.asarray(X)))
+
+
+@MERGE_POLICIES.register("pearson-blocked")
+class PearsonBlockedPolicy(PearsonPolicy):
+    """Scale-generic Pearson merging: blocked hierarchical planning over
+    sketched similarity (core/merging.blocked_merge_plan — the paper's
+    greedy scan per ``FLConfig.block_size``-sized pod, then once more
+    across block representatives).
+
+    ``sketch_dim > 0`` reduces every client to a d-dimensional sketch
+    (core/pearson.sketch_tree) in one streaming pass; all similarity
+    requests are then (·, d) row subsets — neither the (K, M) client
+    matrix nor the K x K correlation ever exists. ``sketch_dim == 0``
+    keeps exact streaming tree-Pearson (documented O(K^2) similarity —
+    the paper-scale / bit-parity configuration; with ``block_size >= K``
+    this policy IS the flat ``pearson`` policy, plan for plan).
+
+    The engine pipeline detects ``blocked`` and plans/mixes per block on
+    device with fixed-shape (nb, B, B) matrices (core/engine.py)."""
+
+    blocked = True
+
+    def effective_block_size(self, K: int) -> int:
+        b = self.fl.block_size
+        return K if b <= 0 else min(int(b), K)
+
+    def device_sketch(self, x_locals) -> jnp.ndarray:
+        """(K, d) sketch — jit-traceable, used in-engine."""
+        return sketch_tree(
+            x_locals,
+            self.fl.sketch_dim,
+            seed=self.fl.seed,
+            mode=self.fl.sketch_mode,
+            exclude_constant=self.fl.corr_exclude_constant,
+        )
+
+    def merge_plan(self, x_locals, weights: np.ndarray,
+                   active: np.ndarray) -> MergePlan:
+        K = _stacked_k(x_locals)
+        if self.fl.sketch_dim > 0:
+            rows = np.asarray(self.device_sketch(x_locals))
+            mode = self.fl.sketch_mode
+
+            def corr_fn(idx):
+                return np.asarray(
+                    pearson_sketch_rows(jnp.asarray(rows[idx]), mode=mode)
+                )
+        else:
+            full = self.similarity(x_locals)
+
+            def corr_fn(idx):
+                return full[np.ix_(idx, idx)]
+
+        return blocked_merge_plan(
+            corr_fn,
+            K,
+            data_sizes=weights.astype(np.int64),
+            threshold=self.fl.threshold,
+            max_group_size=self.fl.max_group_size,
+            active=active.astype(bool),
+            alpha=self.fl.alpha,
+            block_size=self.effective_block_size(K),
+        )
 
 
 @MERGE_POLICIES.register("cosine")

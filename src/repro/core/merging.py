@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -23,7 +23,10 @@ import jax.numpy as jnp
 class MergePlan:
     groups: Tuple[Tuple[int, ...], ...]      # merged groups (indices)
     unmerged: Tuple[int, ...]                # independent nodes
-    W: np.ndarray                            # (K, K) merge matrix
+    W: Optional[np.ndarray]                  # (K, K) merge matrix (None when
+                                             # built with_w=False: the caller
+                                             # mixes on device and only needs
+                                             # the bookkeeping fields)
     active: np.ndarray                       # (K,) bool — representatives + unmerged
     representatives: Tuple[int, ...]         # rep (first member) per group
 
@@ -72,6 +75,7 @@ def plan_from_groups(
     unmerged: Sequence[int],
     data_sizes: Sequence[int],
     alpha: str = "uniform",                  # "uniform" | "data" — merge weights
+    with_w: bool = True,
 ) -> MergePlan:
     """Turn an explicit grouping into the fixed-shape merge matrix.
 
@@ -79,23 +83,30 @@ def plan_from_groups(
     alpha='uniform' gives the paper's alpha=0.5 for pairs). This is the
     shared back half of every merge policy: correlation-driven policies
     derive (groups, unmerged) from a similarity matrix, but e.g. the
-    random-pairs baseline builds the grouping directly."""
-    W = np.zeros((K, K), np.float32)
+    random-pairs baseline builds the grouping directly.
+
+    ``with_w=False`` skips the dense (K, K) matrix — the engine's blocked
+    merge path mixes on device with fixed-shape per-block matrices and
+    only needs the grouping/active bookkeeping, so at K=10,000 no K x K
+    array ever exists on host."""
+    W = np.zeros((K, K), np.float32) if with_w else None
     new_active = np.zeros(K, bool)
     reps = []
     for group in groups:
         rep = group[0]
         reps.append(rep)
-        if alpha == "data":
-            ws = np.asarray([data_sizes[j] for j in group], np.float64)
-            ws = ws / ws.sum()
-        else:
-            ws = np.full(len(group), 1.0 / len(group))
-        for j, w in zip(group, ws):
-            W[rep, j] = w
+        if with_w:
+            if alpha == "data":
+                ws = np.asarray([data_sizes[j] for j in group], np.float64)
+                ws = ws / ws.sum()
+            else:
+                ws = np.full(len(group), 1.0 / len(group))
+            for j, w in zip(group, ws):
+                W[rep, j] = w
         new_active[rep] = True
     for i in unmerged:
-        W[i, i] = 1.0
+        if with_w:
+            W[i, i] = 1.0
         new_active[i] = True
     return MergePlan(
         groups=tuple(tuple(g) for g in groups),
@@ -120,6 +131,150 @@ def build_merge_plan(
         active = np.ones(K, bool)
     groups, unmerged = merge_clients(correlation, threshold, max_group_size, active)
     return plan_from_groups(K, groups, unmerged, data_sizes, alpha)
+
+
+# ---------------------------------------------------------------------------
+# blocked hierarchical planning (tentpole layer 2)
+# ---------------------------------------------------------------------------
+#
+# The paper's greedy scan is O(K^2) over a dense K x K similarity — the
+# right transcription at K=10, a wall at K=10,000. The blocked planner
+# keeps the EXACT paper algorithm as its inner loop but runs it twice at
+# two scales:
+#
+#   pass 1  within each fixed-size block of ``block_size`` consecutive
+#           clients (a pod): ``merge_clients`` over the (B, B) similarity
+#           submatrix, so planning cost is O(K * B) total and the engine
+#           can run the on-device transcription vmapped per block.
+#   pass 2  across blocks: each block designates one representative (its
+#           lowest-index post-pass-1 active node), and ``merge_clients``
+#           runs once over the (nb, nb) representative similarity. A
+#           cross-group's members are the union of its reps' pass-1
+#           answer sets; its merge matrix row is the composition
+#           W2 @ W1 (convex combination of convex combinations — row
+#           stochasticity is preserved by construction).
+#
+# With ``block_size >= K`` there is a single block, pass 2 degenerates to
+# the identity, and the planner IS ``merge_clients`` + ``plan_from_groups``
+# — property-tested bit-for-bit in tests/test_blocked_planner.py.
+
+
+def compose_cross_groups(
+    pass1_groups: Sequence[Sequence[int]],
+    pass1_unmerged: Sequence[int],
+    rep_ids: Sequence[int],
+    cross_groups: Sequence[Sequence[int]],
+) -> Tuple[List[List[int]], List[int]]:
+    """Fold a representative-level grouping back into client-level groups.
+
+    ``pass1_groups``/``pass1_unmerged`` use global client indices;
+    ``cross_groups`` index into ``rep_ids`` (the designated representative
+    per cross-pass position). Shared by the host blocked planner and the
+    engine's blocked-merge decode so both compose identically."""
+    head = {g[0]: list(g) for g in pass1_groups}
+    absorbed: set = set()
+    final_cross: List[List[int]] = []
+    for grp in cross_groups:
+        reps = [int(rep_ids[p]) for p in grp]
+        members: List[int] = []
+        for r in reps:
+            members.extend(head.get(r, [r]))
+            absorbed.add(r)
+        rep0 = reps[0]
+        final_cross.append([rep0] + sorted(m for m in members if m != rep0))
+    groups = [list(g) for g in pass1_groups if g[0] not in absorbed]
+    groups.extend(final_cross)
+    unmerged = [int(u) for u in pass1_unmerged if u not in absorbed]
+    return groups, unmerged
+
+
+def blocked_merge_plan(
+    corr_fn: Callable[[np.ndarray], np.ndarray],
+    K: int,
+    data_sizes: Sequence[int],
+    threshold: float = 0.7,
+    max_group_size: int = 3,
+    active: Optional[np.ndarray] = None,
+    alpha: str = "uniform",
+    block_size: int = 0,
+    with_w: bool = True,
+) -> MergePlan:
+    """Two-pass hierarchical merge plan over a similarity ORACLE.
+
+    ``corr_fn(idx) -> (len(idx), len(idx))`` similarity submatrix — the
+    planner never asks for the full K x K matrix: pass 1 requests one
+    (B, B) block per pod, pass 2 one (nb, nb) representative matrix.
+    Policies back it with sketch rows (``pearson_sketch_rows``) at scale
+    or with a materialized matrix at paper scale.
+
+    ``block_size <= 0`` or ``>= K`` means one block: the flat paper
+    planner, bit for bit. ``with_w=False`` skips the dense W (see
+    ``plan_from_groups``)."""
+    if active is None:
+        active = np.ones(K, bool)
+    active = np.asarray(active, bool)
+    B = K if block_size <= 0 else min(int(block_size), K)
+
+    pass1_groups: List[List[int]] = []
+    pass1_unmerged: List[int] = []
+    rep_ids: List[int] = []                  # designated rep per block
+    for lo in range(0, K, B):
+        idx = np.arange(lo, min(lo + B, K))
+        sub_act = active[idx]
+        if not sub_act.any():
+            continue
+        corr_b = np.asarray(corr_fn(idx))
+        g, u = merge_clients(corr_b, threshold, max_group_size, sub_act)
+        g = [[int(idx[i]) for i in grp] for grp in g]
+        u = [int(idx[i]) for i in u]
+        pass1_groups.extend(g)
+        pass1_unmerged.extend(u)
+        rep_ids.append(min([grp[0] for grp in g] + u))
+
+    nb = -(-K // B)
+    if nb == 1:
+        # single block: the flat paper planner, exactly
+        return plan_from_groups(K, pass1_groups, pass1_unmerged, data_sizes,
+                                alpha, with_w=with_w)
+
+    plan1 = plan_from_groups(K, pass1_groups, pass1_unmerged, data_sizes,
+                             alpha, with_w=with_w)
+    corr_r = np.asarray(corr_fn(np.asarray(rep_ids, np.int64)))
+    g2, _u2 = merge_clients(corr_r, threshold, max_group_size)
+    if not g2:
+        return plan1
+
+    groups, unmerged = compose_cross_groups(
+        pass1_groups, pass1_unmerged, rep_ids, g2
+    )
+    W = None
+    if with_w:
+        # cross-pass alpha weights answer for the pass-1 MERGED sizes (the
+        # rep already speaks for its group), and the effective client-level
+        # merge matrix is the composition of the two convex mixes
+        sizes1 = merged_data_sizes(plan1, data_sizes)
+        cross_g = [[int(rep_ids[p]) for p in grp] for grp in g2]
+        merged_reps = {r for grp in cross_g for r in grp}
+        cross_u = [int(i) for i in np.flatnonzero(plan1.active)
+                   if i not in merged_reps]
+        plan2 = plan_from_groups(K, cross_g, cross_u, sizes1, alpha)
+        W = (plan2.W.astype(np.float64) @ plan1.W.astype(np.float64)).astype(
+            np.float32
+        )
+    new_active = np.zeros(K, bool)
+    reps = []
+    for g in groups:
+        new_active[g[0]] = True
+        reps.append(int(g[0]))
+    for i in unmerged:
+        new_active[i] = True
+    return MergePlan(
+        groups=tuple(tuple(g) for g in groups),
+        unmerged=tuple(unmerged),
+        W=W,
+        active=new_active,
+        representatives=tuple(reps),
+    )
 
 
 def apply_merge(plan: MergePlan, stacked_tree):
@@ -164,6 +319,11 @@ def apply_merge_device(plan: MergePlan, stacked_tree):
     """Device-resident ``apply_merge``: one jitted W @ leaf einsum per leaf
     with donated buffers. Merges local models and control variates through
     the same path; the caller's tree is consumed (donated)."""
+    if plan.W is None:
+        raise ValueError(
+            "apply_merge_device: plan was built with_w=False (no dense W); "
+            "the blocked engine path mixes on device instead"
+        )
     return _mix_tree_device(jnp.asarray(plan.W), stacked_tree)
 
 
@@ -234,15 +394,14 @@ def groups_from_assignment(A, active_new) -> Tuple[List[List[int]], List[int]]:
     ``merge_clients``: representative first, members ascending), so the
     engine's host shell can reuse ``plan_from_groups`` for the shard /
     weight bookkeeping."""
-    A = np.asarray(A)
+    A = np.asarray(A) > 0.5
     act = np.asarray(active_new) > 0
-    groups: List[List[int]] = []
+    counts = A.sum(axis=1)                   # vectorized: the per-row scan
+    groups: List[List[int]] = []             # only runs on actual groups
     unmerged: List[int] = []
-    for i in range(A.shape[0]):
-        if not act[i]:
-            continue
-        members = np.flatnonzero(A[i] > 0.5)
-        if len(members) > 1:
+    for i in np.flatnonzero(act):
+        if counts[i] > 1:
+            members = np.flatnonzero(A[i])
             groups.append([int(i)] + [int(j) for j in members if j != i])
         else:
             unmerged.append(int(i))

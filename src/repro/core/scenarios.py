@@ -66,11 +66,19 @@ class RoundTables:
     round_mask: np.ndarray   # (T, K)    f32 — dropped / delayed this round
     delay: np.ndarray        # (T, K)  int32 — staleness in rounds (0 = none)
     poison: np.ndarray       # (K,)      f32 — model-poison delta factor
+    # (T, K) pre-drawn participation uniforms (None = full participation).
+    # The MASK cannot be pre-drawn — which clients participate depends on
+    # the active set as merges evolve it — but the RANDOMNESS can: per
+    # round, the k smallest-uniform active clients participate
+    # (core/federation.participation_mask), so the engine composes the
+    # mask per segment from this table + the segment's active set.
+    part_u: Optional[np.ndarray] = None
 
 
 def round_tables(scenario: Scenario, num_clients: int, num_rounds: int,
                  steps_per_epoch: int, local_steps: int,
-                 loss_sched=None, delay_sched=None) -> RoundTables:
+                 loss_sched=None, delay_sched=None,
+                 part_u=None) -> RoundTables:
     """Pre-draw a scenario's per-round fault randomness as stacked device-
     ready tables (the engine's counterpart of
     ``FederatedSimulator._round_masks``, vectorized over rounds).
@@ -104,7 +112,9 @@ def round_tables(scenario: Scenario, num_clients: int, num_rounds: int,
     for cid, factor in scenario.model_poison.items():
         poison[cid] = factor
     return RoundTables(steps_mask=steps_mask, round_mask=round_mask,
-                       delay=delay, poison=poison)
+                       delay=delay, poison=poison,
+                       part_u=None if part_u is None
+                       else np.asarray(part_u, np.float64))
 
 
 def _poison_ids(num_clients: int, poison_frac: float,

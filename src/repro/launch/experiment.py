@@ -75,6 +75,12 @@ class ExperimentSpec:
     max_group_size: int = 3
     alpha: str = "uniform"
     corr_sample: int = 0
+    # population scale (merge_policy="pearson-blocked"): pod size for
+    # blocked hierarchical planning (0 = one block, the flat planner) and
+    # the similarity-sketch dimension (0 = exact streaming tree-Pearson;
+    # estimate error O(1/sqrt(sketch_dim)))
+    block_size: int = 0
+    sketch_dim: int = 0
     # scenario
     scenario: str = "normal"
     scenario_kwargs: Dict[str, Any] = field(default_factory=dict, hash=False)
@@ -131,6 +137,8 @@ class ExperimentSpec:
             max_group_size=self.max_group_size,
             alpha=self.alpha,
             corr_sample=self.corr_sample,
+            block_size=self.block_size,
+            sketch_dim=self.sketch_dim,
             pipeline=self.pipeline,
             seed=self.seed,
         )

@@ -34,7 +34,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.pearson import pearson_round_program
+from repro.core.merging import device_merge_plan
+from repro.core.pearson import pearson_round_program, pearson_sketch_rows, sketch_tree
 from repro.launch.dryrun import collective_bytes, peak_bytes as _peak_bytes
 from repro.launch.mesh import make_fl_smoke_mesh, make_production_mesh
 from repro.launch import steps as ST
@@ -212,6 +213,61 @@ def lower_pearson_round(arch: str, K: int, mesh=None, reduced: bool = False):
         }
 
 
+def lower_blocked_plan(arch: str, K: int, block_size: int, sketch_dim: int,
+                       mesh=None, reduced: bool = False,
+                       threshold: float = 0.7, max_group_size: int = 3):
+    """The scale path's merge-planning program (DESIGN.md §9): streaming
+    sketch over the pod-sharded stacked client pytree -> per-block
+    (nb, B, B) sketched Pearson -> vmapped on-device greedy plans. The
+    analyzed collective is the (K, d) sketch reduction — neither the
+    (K, M) client matrix nor the K x K correlation is ever lowered, which
+    is the communication claim that lets K reach 10,000."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=True)
+    B = K if block_size <= 0 else min(int(block_size), K)
+    nb = -(-K // B)
+    Kp = nb * B
+    pad = Kp - K
+    d = sketch_dim if sketch_dim > 0 else 64
+
+    def blocked_plan(stacked):
+        rows = sketch_tree(stacked, d, seed=0, mode="subsample")
+        rows = jnp.pad(rows.astype(jnp.float32), ((0, pad), (0, 0)))
+        corr_b = jax.vmap(pearson_sketch_rows)(rows.reshape(nb, B, -1))
+        act = jnp.pad(jnp.ones((K,), jnp.float32), (0, pad)).reshape(nb, B)
+        w = act
+        _, A1, act1 = jax.vmap(
+            lambda c, a, ww: device_merge_plan(
+                c, a, ww, threshold=threshold, max_group_size=max_group_size
+            )
+        )(corr_b, act, w)
+        return A1, act1
+
+    with mesh:
+        params = ST.param_structs(cfg)
+        pspecs = SH.param_specs(cfg, params, mesh)
+        csh = SH.to_shardings(mesh, SH.client_specs(pspecs))
+        stacked = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), params
+        )
+        fn = jax.jit(
+            blocked_plan,
+            in_shardings=(csh,),
+            out_shardings=NamedSharding(mesh, P()),
+        )
+        compiled = fn.lower(stacked).compile()
+        coll = collective_bytes(compiled.as_text())
+        return {
+            "program": "blocked_plan", "arch": arch, "K": K,
+            "block_size": B, "num_blocks": nb, "sketch_dim": d,
+            "path": "sketch_tree+blocked", "collectives": coll,
+            "collective_bytes": sum(coll.values()),
+            "peak_bytes": _peak_bytes(compiled.memory_analysis()),
+        }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -228,6 +284,16 @@ def main():
                          "scan-over-rounds segment program at baseline K")
     ap.add_argument("--engine-rounds", type=int, default=4,
                     help="rounds per engine segment lowering")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="baseline K (overrides the default 8 / --spec)")
+    ap.add_argument("--merge-policy", default="pearson",
+                    choices=["pearson", "pearson-blocked"],
+                    help="pearson-blocked additionally lowers the blocked "
+                         "sketched planning program at baseline K")
+    ap.add_argument("--block-size", type=int, default=128,
+                    help="pod size for the blocked planning lowering")
+    ap.add_argument("--sketch-dim", type=int, default=64,
+                    help="sketch dimension for the blocked planning lowering")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     k_base = 8
@@ -239,6 +305,8 @@ def main():
         k_base = spec.num_clients
         if spec.mesh not in (None, "none"):
             mesh = resolve_mesh(spec.mesh)
+    if args.clients is not None:
+        k_base = args.clients
     if mesh is None:
         # build the default mesh once; the lowerings below reuse it
         mesh = make_production_mesh(multi_pod=True)
@@ -278,6 +346,17 @@ def main():
               f"coll_bytes/dev/round={r3['collective_bytes_per_round']:.3e}",
               flush=True)
         recs.append(r3)
+    if args.merge_policy == "pearson-blocked":
+        K = pod_multiple(k_base)
+        r4 = lower_blocked_plan(
+            args.arch, K, args.block_size, args.sketch_dim,
+            mesh=mesh, reduced=args.smoke,
+        )
+        r4["stage"] = "baseline"
+        print(f"blocked_plan K={K} B={r4['block_size']} d={r4['sketch_dim']}: "
+              f"coll_bytes/dev={r4['collective_bytes']:.3e} "
+              f"peak={r4['peak_bytes']/2**30:.2f}GiB", flush=True)
+        recs.append(r4)
     out = os.path.join(args.out, f"fl_round__{args.arch}{tag_suffix}.json")
     with open(out, "w") as f:
         json.dump(recs, f, indent=2)

@@ -51,6 +51,8 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         merge_at=tuple(args.merge_at),
         threshold=args.threshold,
         corr_sample=args.corr_sample,
+        block_size=args.block_size,
+        sketch_dim=args.sketch_dim,
         scenario=args.scenario,
         rounds=args.rounds,
         local_epochs=args.local_epochs,
@@ -84,6 +86,12 @@ def main():
     ap.add_argument("--corr-sample", type=int, default=0,
                     help="correlate over a random coordinate subsample "
                          "(0 = all params), fused into the streaming path")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="pearson-blocked: pod size for blocked "
+                         "hierarchical planning (0 = flat, one block)")
+    ap.add_argument("--sketch-dim", type=int, default=0,
+                    help="pearson-blocked: similarity-sketch dimension "
+                         "(0 = exact streaming tree-Pearson)")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--n-train", type=int, default=6000)
     ap.add_argument("--n-test", type=int, default=1000)

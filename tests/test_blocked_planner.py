@@ -1,0 +1,284 @@
+"""Blocked hierarchical merge planning + sketched similarity (DESIGN.md
+§9): the flat-reduction property (block_size >= K IS the paper planner,
+bit for bit), cross-block composition invariants (row-stochastic W,
+conserved merged data sizes), sketch exactness/concentration, the
+pearson-blocked policy end to end on device and engine, and the
+ExperimentSpec knob round-trip."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.merging import (
+    blocked_merge_plan,
+    build_merge_plan,
+    compose_cross_groups,
+    merge_clients,
+    merged_data_sizes,
+    plan_from_groups,
+)
+from repro.core.pearson import pearson_matrix, pearson_sketch_rows, sketch_tree
+
+
+def _corr_from_seed(K: int, seed: int, knife_eps: float = 1e-3,
+                    symmetric: bool = False) -> np.ndarray:
+    """Arbitrary 'similarity' matrix: values in [-1, 1], diag 1, nudged
+    off the f32 threshold knife edge (documented measure-zero device/host
+    disagreement window, see core/engine.py). Asymmetric by default —
+    the flat-reduction property must hold even there; the partition
+    invariants only hold for symmetric input (real Pearson is symmetric;
+    on asymmetric matrices the paper's transcription can absorb an
+    already-unmerged node into a later group)."""
+    rng = np.random.default_rng(seed)
+    C = rng.uniform(-1.0, 1.0, size=(K, K))
+    if symmetric:
+        C = (C + C.T) / 2.0
+    C = np.where(np.abs(C - round(C.mean(), 1)) < knife_eps, C + 2 * knife_eps, C)
+    np.fill_diagonal(C, 1.0)
+    return C.astype(np.float32)
+
+
+def _oracle(C: np.ndarray):
+    return lambda idx: C[np.ix_(idx, idx)]
+
+
+# ---------------------------------------------------------------------------
+# flat reduction: one block IS the paper planner
+# ---------------------------------------------------------------------------
+
+
+@given(
+    K=st.integers(min_value=1, max_value=17),
+    seed=st.integers(min_value=0, max_value=10_000),
+    threshold=st.floats(min_value=-0.5, max_value=0.9),
+    G=st.integers(min_value=2, max_value=5),
+    act_seed=st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_single_block_reduces_to_flat_planner(K, seed, threshold, G, act_seed):
+    """block_size >= K (and <= 0) reproduces ``merge_clients`` +
+    ``build_merge_plan`` exactly — groups, unmerged order, W, active —
+    on arbitrary asymmetric matrices with partial active masks."""
+    C = _corr_from_seed(K, seed)
+    active = np.random.default_rng(act_seed).random(K) < 0.7
+    sizes = np.random.default_rng(act_seed + 1).integers(1, 50, K)
+    flat = build_merge_plan(C, sizes, threshold, G, active, alpha="data")
+    for bs in (0, K, K + 3):
+        blk = blocked_merge_plan(_oracle(C), K, sizes, threshold, G,
+                                 active, alpha="data", block_size=bs)
+        assert blk.groups == flat.groups
+        assert blk.unmerged == flat.unmerged
+        assert blk.representatives == flat.representatives
+        np.testing.assert_array_equal(blk.active, flat.active)
+        np.testing.assert_array_equal(blk.W, flat.W)
+
+
+@given(
+    K=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=10_000),
+    threshold=st.floats(min_value=-0.2, max_value=0.8),
+    B=st.integers(min_value=1, max_value=9),
+    act_seed=st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_blocked_plan_invariants(K, seed, threshold, B, act_seed):
+    """Any block size (symmetric similarity, as real Pearson is): W rows
+    are convex on surviving nodes (sum 1), zero on retired ones; every
+    pre-merge active client appears exactly once across groups+unmerged;
+    total merged data size is conserved."""
+    C = _corr_from_seed(K, seed, symmetric=True)
+    active = np.random.default_rng(act_seed).random(K) < 0.8
+    sizes = np.random.default_rng(act_seed + 1).integers(1, 50, K)
+    plan = blocked_merge_plan(_oracle(C), K, sizes, threshold, 3,
+                              active, alpha="data", block_size=B)
+    members = [i for g in plan.groups for i in g] + list(plan.unmerged)
+    assert sorted(members) == sorted(np.flatnonzero(active))
+    rows = plan.W.sum(axis=1)
+    np.testing.assert_allclose(rows[plan.active], 1.0, atol=1e-5)
+    np.testing.assert_allclose(rows[~plan.active], 0.0, atol=1e-6)
+    sizes_after = merged_data_sizes(plan, sizes)
+    assert sizes_after.sum() == sizes[active].sum()
+    assert (sizes_after[~plan.active] == 0).all()
+
+
+def test_cross_block_composition_example():
+    """Deterministic cross-pass walkthrough: two blocks whose reps
+    correlate above threshold compose into one client-level group headed
+    by the lower-index rep, with the absorbed rep's pass-1 members."""
+    # block 0: {0,1} merge (rep 0), 2 unmerged; block 1: {3,4} merge (rep 3)
+    C = np.eye(6, dtype=np.float32)
+    for i, j in ((0, 1), (3, 4), (0, 3)):
+        C[i, j] = C[j, i] = 0.95
+    plan = blocked_merge_plan(_oracle(C), 6, np.ones(6, np.int64),
+                              threshold=0.9, block_size=3)
+    assert plan.groups == ((0, 1, 3, 4),)
+    assert sorted(plan.unmerged) == [2, 5]
+    np.testing.assert_allclose(plan.W[0], [0.25, 0.25, 0, 0.25, 0.25, 0],
+                               atol=1e-6)
+    assert compose_cross_groups([[0, 1], [3, 4]], [2, 5], [0, 2, 3],
+                                [[0, 2]]) == ([[0, 1, 3, 4]], [2, 5])
+
+
+def test_blocked_never_requests_full_matrix():
+    """The planner only asks the oracle for per-block and representative
+    submatrices — never K x K (the no-K x K-object scale contract)."""
+    K, B = 32, 8
+    C = _corr_from_seed(K, 3)
+    asked = []
+
+    def oracle(idx):
+        asked.append(len(idx))
+        return C[np.ix_(idx, idx)]
+
+    blocked_merge_plan(oracle, K, np.ones(K, np.int64), threshold=0.5,
+                       block_size=B)
+    assert max(asked) <= max(B, -(-K // B))
+
+
+# ---------------------------------------------------------------------------
+# sketched similarity
+# ---------------------------------------------------------------------------
+
+
+def _tree(K, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=(K, m)).astype(np.float32))
+            for i, m in enumerate(sizes)}
+
+
+def test_subsample_sketch_exact_when_d_covers_m():
+    """sketch_dim >= M: the subsample sketch is the whole concatenated
+    matrix, so sketched Pearson equals exact Pearson."""
+    tree = _tree(6, (4, 3, 5), seed=1)
+    M = 12
+    rows = sketch_tree(tree, M + 10, seed=0, mode="subsample")
+    assert rows.shape == (6, M)
+    X = jnp.concatenate([tree[k].reshape(6, -1) for k in sorted(tree)], axis=1)
+    np.testing.assert_allclose(
+        np.asarray(pearson_sketch_rows(rows)),
+        np.asarray(pearson_matrix(X)), atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("mode", ["subsample", "project"])
+def test_sketch_concentration(mode):
+    """O(1/sqrt(d)) concentration: on correlated rows (M=4096), a d=512
+    sketch estimates every pairwise similarity within 0.15 and preserves
+    the high/low similarity ordering that thresholding depends on."""
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=4096).astype(np.float32)
+    rows = np.stack([
+        base + 0.15 * rng.normal(size=4096),        # ~0.99 with next
+        base + 0.15 * rng.normal(size=4096),
+        rng.normal(size=4096),                       # ~0 with everyone
+        -base + 0.15 * rng.normal(size=4096),        # ~-0.99 with 0/1
+    ]).astype(np.float32)
+    tree = {"w": jnp.asarray(rows)}
+    exact = np.asarray(pearson_matrix(jnp.asarray(rows)))
+    sk = sketch_tree(tree, 512, seed=3, mode=mode)
+    est = np.asarray(pearson_sketch_rows(sk, mode=mode))
+    np.testing.assert_allclose(est, exact, atol=0.15)
+    assert est[0, 1] > 0.8 and est[0, 3] < -0.8 and abs(est[0, 2]) < 0.3
+
+
+def test_sketch_tree_validates():
+    tree = _tree(3, (4,))
+    with pytest.raises(ValueError):
+        sketch_tree(tree, 0)
+    with pytest.raises(ValueError):
+        sketch_tree(tree, 8, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# pearson-blocked end to end
+# ---------------------------------------------------------------------------
+
+
+def _spec(pipeline, **kw):
+    from repro.launch.experiment import ExperimentSpec
+    base = dict(model="linear", dataset="blobs", n_train=8 * 120, n_test=300,
+                data_kwargs={"num_classes": 4, "dim": 8},
+                partition="class_pairs", partition_kwargs={"n_per": 120},
+                num_clients=8, lr_local=0.1, merge_policy="pearson-blocked",
+                merge_at=(2,), threshold=0.3, rounds=5, local_epochs=2,
+                steps_per_epoch=5, batch_size=16, pipeline=pipeline)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _hist_key(h):
+    return [(r.round, r.accuracy, r.active_nodes, r.updates_sent,
+             r.active_nodes_end, r.merged_groups) for r in h]
+
+
+def test_blocked_policy_flat_config_matches_pearson_bitwise():
+    """block_size=0, sketch_dim=0: pearson-blocked IS the flat pearson
+    policy — identical RoundRecord history on device AND engine (the
+    engine demotes to the flat fused merge program)."""
+    from repro.launch.experiment import run_experiment
+    for pipe in ("device", "engine"):
+        _, flat = run_experiment(_spec(pipe, merge_policy="pearson"),
+                                 verbose=False)
+        _, blk = run_experiment(_spec(pipe), verbose=False)
+        assert _hist_key(flat) == _hist_key(blk)
+
+
+@pytest.mark.parametrize("sketch_dim", [0, 16])
+def test_blocked_engine_matches_device(sketch_dim):
+    """Multi-block (B=4 over K=8) pearson-blocked: the engine's fused
+    (nb, B, B) program + cross pass decodes to the same groups, active
+    sets and accounting as the per-round device pipeline. Accuracy is
+    compared to f32-mix tolerance: the engine mixes the two passes
+    sequentially in f32 where the host planner mixes once through the
+    f64-composed dense W."""
+    from repro.launch.experiment import run_experiment
+    _, dev = run_experiment(_spec("device", block_size=4,
+                                  sketch_dim=sketch_dim), verbose=False)
+    _, eng = run_experiment(_spec("engine", block_size=4,
+                                  sketch_dim=sketch_dim), verbose=False)
+    assert any(r.merged_groups for r in dev)
+    for d, e in zip(dev, eng):
+        assert (d.round, d.active_nodes, d.updates_sent, d.active_nodes_end,
+                d.merged_groups) == (e.round, e.active_nodes, e.updates_sent,
+                                     e.active_nodes_end, e.merged_groups)
+        assert abs(d.accuracy - e.accuracy) < 1e-5
+
+
+def test_spec_knobs_round_trip():
+    spec = _spec("engine", block_size=128, sketch_dim=64)
+    from repro.launch.experiment import ExperimentSpec
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back.block_size == 128 and back.sketch_dim == 64
+    fl = back.fl_config()
+    assert fl.block_size == 128 and fl.sketch_dim == 64
+
+
+# ---------------------------------------------------------------------------
+# BENCH_merge.json scale_rounds schema
+# ---------------------------------------------------------------------------
+
+
+def test_scale_rounds_schema():
+    """The committed benchmark section carries what the scale claim
+    needs: per-cell K/policy/wall-time fields, the K=10 bit-for-bit
+    flag, and the K=1024 blocked-vs-flat merge speedup."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_merge.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_merge.json not present")
+    with open(path) as f:
+        bench = json.load(f)
+    if "scale_rounds" not in bench:
+        pytest.skip("scale_rounds not yet recorded")
+    sc = bench["scale_rounds"]
+    assert sc["cells"], "scale_rounds.cells is empty"
+    for cell in sc["cells"]:
+        for field in ("K", "policy", "engine_round_ms",
+                      "merge_round_wall_ms", "rounds_per_sec"):
+            assert field in cell, f"scale_rounds cell missing {field}"
+    ks = {c["K"] for c in sc["cells"]}
+    assert 10 in ks
+    if {10} < ks:
+        assert sc.get("k10_history_bit_for_bit") is True

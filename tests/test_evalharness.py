@@ -210,7 +210,17 @@ def test_robustness_harness_smoke_schema(tmp_path):
     )
     assert mimic_mean["infiltrated_runs"] == 2
     assert mimic_mean["degradation_vs_clean"]["mean"] > 0.2
+    # cnn_cells: the paper-model (CNN / synthetic MNIST) smoke pair rides
+    # the same machinery; run accounting covers both grids
+    assert len(on_disk["cnn_cells"]) == 2
+    for cell in on_disk["cnn_cells"]:
+        assert cell["model"] == "cnn_mnist"
+        assert len(cell["final_accuracy"]) == 2
+    cnn_mimic = next(c for c in on_disk["cnn_cells"]
+                     if c["scenario"] == "pearson_mimic")
+    assert cnn_mimic["infiltrated_runs"] == 2
     assert report["runs_executed"] == len(
-        {(c["scenario"], c["merge_policy"], c["aggregator"], s)
-         for c in on_disk["cells"] for s in c["seeds"]}
+        {(c["model"], c["scenario"], c["merge_policy"], c["aggregator"], s)
+         for c in on_disk["cells"] + on_disk["cnn_cells"]
+         for s in c["seeds"]}
     )
