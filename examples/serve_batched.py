@@ -1,25 +1,30 @@
-"""Serve a small model with batched requests: prefill a batch of prompts,
-then decode greedily with per-layer KV/recurrent caches — the same
-prefill/serve_step programs the dry-run lowers at 32k/500k scale.
+"""Serve a small model with CONTINUOUS batching: a fixed-slot ServeEngine
+admits requests into free slots as they show up (no lockstep batch), one
+fused decode step advances every occupied slot, and a late arrival rides
+along with requests already mid-decode.
+
+The lockstep ``generate`` loop this example used to demo is now the
+parity oracle — the engine's tokens are checked against it live.
 
   PYTHONPATH=src python examples/serve_batched.py --arch qwen3-1.7b
-  PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-2b
+  PYTHONPATH=src python examples/serve_batched.py --arch xlstm-125m
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import init_params
+from repro.serving import Request, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
@@ -29,21 +34,52 @@ def main():
         raise SystemExit(f"{args.arch} is encoder-only; pick a decoder arch")
     rng = jax.random.PRNGKey(0)
     params = init_params(rng, cfg)
+    capacity = args.prompt_len + args.new_tokens
 
-    prompts = jax.random.randint(
-        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size
-    )
+    nprng = np.random.default_rng(0)
+    prompts = [
+        nprng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
+        for _ in range(args.slots + 1)  # one more request than slots
+    ]
+
+    eng = ServeEngine(params, cfg, num_slots=args.slots, capacity=capacity)
     t0 = time.time()
-    tokens, _ = generate(
-        params, cfg, {"tokens": prompts},
-        max_new_tokens=args.new_tokens, greedy=True,
-    )
+    active = [
+        eng.try_admit(Request(rid=i, client_id=0, prompt=p,
+                              max_new_tokens=args.new_tokens))
+        for i, p in enumerate(prompts[:-1])
+    ]
+    # a late request arrives mid-decode: admitted the moment a slot frees
+    late = Request(rid=args.slots, client_id=0, prompt=prompts[-1],
+                   max_new_tokens=args.new_tokens)
+    pending, steps_at_admit = [late], {}
+    while eng.num_active or pending:
+        if pending and eng.free_slots():
+            a = eng.try_admit(pending.pop(0))
+            steps_at_admit[a.request.rid] = eng.steps
+            active.append(a)
+        eng.step()
     dt = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.new_tokens}  ({dt:.2f}s)")
-    for i in range(args.batch):
-        print(f"  req{i}: ...{list(map(int, prompts[i, -4:]))} -> "
-              f"{list(map(int, tokens[i]))}")
+
+    print(f"arch={cfg.name} slots={args.slots} prompt={args.prompt_len} "
+          f"new={args.new_tokens}  {eng.steps} fused steps  ({dt:.2f}s)")
+    for a in active:
+        tag = (f" (admitted at step {steps_at_admit[a.request.rid]})"
+               if a.request.rid in steps_at_admit else "")
+        print(f"  req{a.request.rid}: "
+              f"...{list(map(int, a.request.prompt[-4:]))} -> "
+              f"{a.tokens}{tag}")
+
+    # live parity check against the lockstep oracle
+    for a in active:
+        ref, _ = generate(
+            params, cfg, {"tokens": a.request.prompt[None]},
+            max_new_tokens=args.new_tokens, capacity=capacity,
+        )
+        assert a.tokens == np.asarray(ref)[0].tolist(), (
+            f"req{a.request.rid} diverged from the generate oracle"
+        )
+    print(f"parity: all {len(active)} requests match the generate oracle")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,15 @@
 
 Leaves are stored under flattened key paths; the treedef is rebuilt from a
 template on load (robust across jax versions, no pickle of treedefs).
+
+Writes are atomic: the archive is written to a same-directory temp file
+and moved into place with ``os.replace``, so a reader that opens ``path``
+— e.g. a serving replica hot-swapping weights while the federation loop
+keeps checkpointing — always sees either the previous complete checkpoint
+or the new complete one, never a truncated archive. The temp file is
+opened explicitly, which also sidesteps ``np.savez``'s silent ``.npz``
+suffix appending: the checkpoint lands at exactly the path the caller
+gave, whatever its extension.
 """
 from __future__ import annotations
 
@@ -22,7 +31,8 @@ def _leaf_paths(tree) -> list:
 
 
 def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {}
     for key, leaf in _leaf_paths(tree):
         arr = np.asarray(leaf)
@@ -32,7 +42,19 @@ def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
             arrays[key] = arr
     if step is not None:
         arrays["__step__"] = np.asarray(step)
-    np.savez(path, **arrays)
+    # same-directory temp file: os.replace is atomic only within one
+    # filesystem. Writing into an open file object (not a path) keeps
+    # np.savez from appending ".npz" behind our back.
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load_pytree(path: str, template: Any):

@@ -67,6 +67,7 @@ from repro.core.merging import (
     compose_cross_groups,
     device_merge_plan,
     groups_from_assignment,
+    intermediary_models,
     mix_stacked_tree,
     plan_from_groups,
 )
@@ -133,6 +134,22 @@ class RoundEngine:
             self._nb = -(-sim.K // self._B)
             if self._nb == 1 and fl.sketch_dim == 0:
                 self._blocked = False
+        # the post-merge hook (serving checkpoints) needs the round-t local
+        # models, which the blocked program never materializes as a flat
+        # (K, ...) stack — and the fused programs must bake in whether the
+        # extra output exists, so a cached program set from a hookless run
+        # cannot be reused (and vice versa)
+        self._want_locals = getattr(sim, "on_merge", None) is not None
+        if self._want_locals and self._blocked:
+            raise ValueError(
+                "on_merge hook is not supported with blocked engine "
+                "planning (local models are never materialized flat); "
+                "use the flat engine or the device pipeline"
+            )
+        if programs is not None and (
+            programs.get("want_locals", False) != self._want_locals
+        ):
+            programs = None
         self.programs = programs if programs is not None else self._build_programs()
 
     # ------------------------------------------------------------------
@@ -145,6 +162,7 @@ class RoundEngine:
         round_body = make_round_fn(sim.loss_fn, fl.algo)
         pol = sim.policy
         mesh = sim.mesh
+        want_locals = self._want_locals
 
         # jittable crafting adversary (DESIGN.md §8): the round splits into
         # train -> craft -> aggregate INSIDE the scan, with the adversary's
@@ -280,6 +298,10 @@ class RoundEngine:
             c_l = mix_stacked_tree(W_eff, c_l)
             weights = jnp.where(has_groups, A @ weights, weights)
             state = (params, c_g, c_l, weights, act_new, *rest)
+            if want_locals:
+                # serving checkpoint hook: ship the round-t local models to
+                # host so intermediary models can be formed from the plan
+                return state, losses, A, act_new, x_locals
             return state, losses, A, act_new
 
         def merge_host(state, const, xrow):
@@ -408,8 +430,11 @@ class RoundEngine:
                         buf_tree, rep, rep, rep, adv_sh)
             seg = jax.jit(segment, donate_argnums=(0,),
                           out_shardings=(state_sh, (rep_tree, rep)))
+            dev_out = (state_sh, rep, rep, rep)
+            if want_locals:
+                dev_out = dev_out + (stacked_tree,)
             m_dev = jax.jit(merge_device, donate_argnums=(0,),
-                            out_shardings=(state_sh, rep, rep, rep))
+                            out_shardings=dev_out)
             m_host = jax.jit(merge_host, donate_argnums=(0,),
                              out_shardings=(state_sh, rep, stacked_tree))
             m_blk = merge_blocked and jax.jit(
@@ -424,7 +449,8 @@ class RoundEngine:
                 merge_blocked, donate_argnums=(0,)
             )
         return {"segment": seg, "merge_device": m_dev,
-                "merge_host": m_host, "merge_blocked": m_blk}
+                "merge_host": m_host, "merge_blocked": m_blk,
+                "want_locals": want_locals}
 
     # ------------------------------------------------------------------
     def _init_state(self):
@@ -566,9 +592,14 @@ class RoundEngine:
             else:
                 sim.active = plan.active.astype(np.float32)
         elif self._device_plan:
-            state, losses, A, act_new = self.programs["merge_device"](
+            out = self.programs["merge_device"](
                 state, self._const(), xrow
             )
+            if self._want_locals:
+                state, losses, A, act_new, x_locals = out
+            else:
+                state, losses, A, act_new = out
+                x_locals = None
             groups, unmerged = groups_from_assignment(
                 np.asarray(A), np.asarray(act_new)
             )
@@ -578,10 +609,18 @@ class RoundEngine:
             )
             sim.merge_plan = plan
             if plan.groups:
+                # intermediary models mix with PRE-merge data shares; grab
+                # them before the bookkeeping folds weights into reps
+                w_pre = sim.weights.copy()
                 # controls were mixed on device; the host shell only moves
                 # shard rows, refreshes weights/active mirrors, and
                 # rebuilds the flat row buffers
                 sim._merge_bookkeeping(plan)
+                if self._want_locals:
+                    models = intermediary_models(
+                        plan, x_locals, alpha=fl.alpha, data_sizes=w_pre
+                    )
+                    sim.on_merge(t, plan, models, state[0])
             else:
                 sim.active = plan.active.astype(np.float32)
         else:
@@ -608,7 +647,13 @@ class RoundEngine:
                     c_l = jax.device_put(
                         c_l, SH.client_stack_shardings(sim.mesh, c_l)
                     )
+                w_pre = sim.weights.copy()
                 sim._merge_bookkeeping(plan)
+                if self._want_locals:
+                    models = intermediary_models(
+                        plan, x_locals, alpha=fl.alpha, data_sizes=w_pre
+                    )
+                    sim.on_merge(t, plan, models, state[0])
                 state = (state[0], state[1], c_l,
                          _rep(sim.weights), _rep(sim.active), *state[5:])
             else:

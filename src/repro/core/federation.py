@@ -41,6 +41,7 @@ from repro.core.merge_policy import make_merge_policy
 from repro.core.merging import (
     apply_merge,
     apply_merge_device,
+    intermediary_models,
     merged_data_sizes,
 )
 from repro.core.scaffold import (
@@ -330,6 +331,15 @@ class FederatedSimulator:
         self.weights = np.asarray([len(y) for _, y in self.shards], np.float32)
         self.merge_plan = None
         self.history: List[RoundRecord] = []
+        # post-merge checkpoint hook (serving bridge, DESIGN.md §10):
+        # ``on_merge(t, plan, models, global_params)`` fires on every merge
+        # round that actually formed groups, with ``models`` the
+        # {representative: merged local-model pytree} serving artifacts
+        # (core/merging.intermediary_models) and ``global_params`` the
+        # round's post-aggregation global model. Set it BEFORE run() — the
+        # engine pipeline bakes "does the fused merge step return the
+        # stacked local models?" into its compiled programs.
+        self.on_merge: Optional[Callable] = None
 
         # adaptive adversary (DESIGN.md §8): crafting adversaries take the
         # SPLIT round path — jitted train half, eager craft (so host-
@@ -509,7 +519,7 @@ class FederatedSimulator:
             )
 
     # ------------------------------------------------------------------
-    def _merge(self, x_locals) -> Tuple[Tuple[int, ...], ...]:
+    def _merge(self, t: int, x_locals) -> Tuple[Tuple[int, ...], ...]:
         """Run the configured MergePolicy on the round's local models and
         apply its plan: mix control state, move merged members' data rows
         to the representative, update weights and the active mask. The
@@ -521,6 +531,13 @@ class FederatedSimulator:
             # threshold): no state changes, no buffer rebuild
             self.active = plan.active.astype(np.float32)
             return ()
+        # serving bridge: snapshot the intermediary models BEFORE the
+        # bookkeeping advances weights (alpha='data' mixes with the
+        # pre-merge shares the plan was computed against)
+        if self.on_merge is not None:
+            models = intermediary_models(
+                plan, x_locals, self.fl.alpha, self.weights
+            )
         # merge control variates (paper line 46: c_merged)
         if self.fl.pipeline == "device":
             # jitted W @ leaf contraction; c_locals donated (mixed in place)
@@ -530,6 +547,8 @@ class FederatedSimulator:
                 jnp.asarray, apply_merge(plan, jax.device_get(self.c_locals))
             )
         self._merge_bookkeeping(plan)
+        if self.on_merge is not None:
+            self.on_merge(t, plan, models, self.params)
         return plan.groups
 
     def _merge_bookkeeping(self, plan):
@@ -725,7 +744,7 @@ class FederatedSimulator:
             active_round = self.active.copy()
             merged: Tuple[Tuple[int, ...], ...] = ()
             if will_merge:
-                merged = self._merge(x_locals)
+                merged = self._merge(t, x_locals)
                 if overlap and t + 1 < fl.num_rounds:
                     # shard buffers were rebuilt; gather from the merged
                     # layout (no overlap win on merge rounds)

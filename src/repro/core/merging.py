@@ -327,6 +327,36 @@ def apply_merge_device(plan: MergePlan, stacked_tree):
     return _mix_tree_device(jnp.asarray(plan.W), stacked_tree)
 
 
+def intermediary_models(plan: MergePlan, x_locals, alpha: str = "uniform",
+                        data_sizes: Optional[Sequence[float]] = None):
+    """The merge round's serving artifacts: per merged group, the
+    intermediary node's model ``x_merged = sum_j alpha_j x_j`` over the
+    group's round-t local models (paper line 45 — the same row weights
+    ``plan_from_groups`` puts in W, computed per group directly so no
+    (K, K) matrix is ever needed). Returns {representative: model pytree}
+    on device; the federation's ``on_merge`` hook checkpoints these for
+    the serving replicas (DESIGN.md §10).
+
+    ``data_sizes`` must be the PRE-merge per-client data weights (the ones
+    the plan was computed against) when ``alpha='data'``."""
+    out = {}
+    for group in plan.groups:
+        idx = np.asarray(group)
+        if alpha == "data":
+            ws = np.asarray([data_sizes[j] for j in group], np.float64)
+            ws = ws / ws.sum()
+        else:
+            ws = np.full(len(group), 1.0 / len(group))
+        w = jnp.asarray(ws, jnp.float32)
+        out[int(group[0])] = jax.tree_util.tree_map(
+            lambda leaf: jnp.tensordot(
+                w, leaf[idx].astype(jnp.float32), axes=1
+            ).astype(leaf.dtype),
+            x_locals,
+        )
+    return out
+
+
 def device_merge_plan(
     corr: jnp.ndarray,
     active: jnp.ndarray,

@@ -1,0 +1,48 @@
+"""Synthetic class-conditional token sequences — the LM task that lets the
+federation train a *servable* model (models/model.py architectures) with
+the same non-IID machinery as the vision toys.
+
+Each class c is a noisy modular walk: ``t[i+1] = (t[i] + stride_c) % V``
+with probability ``1 - noise``, else a uniform resample. The per-class
+stride makes next-token prediction learnable (infer the stride from the
+prefix, then extrapolate) and makes gradients class-clustered, so the
+label-based non-IID partitions and the Pearson merge behave exactly as
+they do on blobs: clients sharing classes correlate and merge.
+
+The class id doubles as the partition label (``y``); the sequence itself
+is the model input (``x``, (N, L) int32) — FL batches are still
+``{"x", "y"}``, and the LM entry forwards ``x`` as ``{"tokens": x}``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_token_walks(n: int, seed: int = 0, num_classes: int = 4,
+                       seq_len: int = 16, vocab_size: int = 512,
+                       stride_base: int = 7, noise: float = 0.05):
+    """(x (n, seq_len) int32, y (n,) int32): class-conditional walks."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, num_classes, n)
+    strides = stride_base * (1 + np.arange(num_classes))
+    x = np.empty((n, seq_len), np.int64)
+    x[:, 0] = rng.integers(0, vocab_size, n)
+    flip = rng.random((n, seq_len)) < noise
+    resample = rng.integers(0, vocab_size, (n, seq_len))
+    for i in range(1, seq_len):
+        step = (x[:, i - 1] + strides[y]) % vocab_size
+        x[:, i] = np.where(flip[:, i], resample[:, i], step)
+    return x.astype(np.int32), y.astype(np.int32)
+
+
+def make_synthetic_tokens(n_train: int, n_test: int, seed: int = 0,
+                          num_classes: int = 4, seq_len: int = 16,
+                          vocab_size: int = 512, stride_base: int = 7,
+                          noise: float = 0.05):
+    """Train/test split with decorrelated draws (test stream = seed + 99,
+    the toy-data convention)."""
+    kw = dict(num_classes=num_classes, seq_len=seq_len,
+              vocab_size=vocab_size, stride_base=stride_base, noise=noise)
+    x_tr, y_tr = sample_token_walks(n_train, seed, **kw)
+    x_te, y_te = sample_token_walks(n_test, seed + 99, **kw)
+    return x_tr, y_tr, x_te, y_te

@@ -242,6 +242,13 @@ def _dataset_blobs(spec: ExperimentSpec):
                       **spec.data_kwargs)
 
 
+@FL_DATASETS.register("synthetic_tokens")
+def _dataset_synthetic_tokens(spec: ExperimentSpec):
+    from repro.data.tokens import make_synthetic_tokens
+    return make_synthetic_tokens(spec.n_train, spec.n_test, seed=spec.seed,
+                                 **spec.data_kwargs)
+
+
 @PARTITIONS.register("noniid_classes")
 def _partition_noniid(labels, num_clients, seed=0, **kw):
     from repro.data.partition import partition_noniid_classes
@@ -284,6 +291,12 @@ def _model_linear(spec: ExperimentSpec, x_te, y_te):
         lambda params: linear_accuracy(params, x_te, y_te),
         lambda params, x, y: linear_accuracy(params, x, y),
     )
+
+
+@FL_MODELS.register("xlstm_lm")
+def _model_xlstm_lm(spec: ExperimentSpec, x_te, y_te):
+    from repro.serving.fl_model import make_lm_entry
+    return make_lm_entry(spec, x_te, y_te)
 
 
 @MESHES.register("fl")

@@ -3,9 +3,18 @@
 ``states_from_prefill`` converts the raw per-layer prefill states into
 decode-ready caches (capacity padding / sliding-window ring placement),
 so ``generate`` can run prefill once and then step token-by-token.
+
+``generate`` is the *sequential parity oracle* for the continuous-batching
+``repro.serving.engine.ServeEngine``: one prefill, then one decode step per
+token over the whole batch in lockstep. Its per-token step goes through
+``decode_step_fn`` — a jitted decode step cached per config (jax's own
+jit cache then keys on the batch shape), so the loop no longer retraces
+``M.decode_step`` on every token; ``jit_decode=False`` keeps the original
+eager path for parity tests.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -47,6 +56,31 @@ def states_from_prefill(cfg: ModelConfig, states, seq_len: int, capacity: int):
     return tuple(out)
 
 
+def _decode_step(cfg, params, states, tokens, pos):
+    return M.decode_step(params, cfg, states, tokens, pos)
+
+
+@functools.lru_cache(maxsize=64)
+def decode_step_fn(cfg: ModelConfig):
+    """Jitted ``M.decode_step`` for ``cfg`` (hashable frozen dataclass).
+
+    Cached here per config; jax's jit cache keys the compiled program on
+    the (batch, capacity) shapes of the state pytree, so each distinct
+    serving shape compiles exactly once per process instead of retracing
+    per generated token."""
+    return jax.jit(functools.partial(_decode_step, cfg))
+
+
+def _prefill(cfg, params, batch):
+    return M.prefill(params, cfg, batch)
+
+
+@functools.lru_cache(maxsize=64)
+def prefill_fn(cfg: ModelConfig):
+    """Jitted ``M.prefill`` per config (jit cache keys on (B, L))."""
+    return jax.jit(functools.partial(_prefill, cfg))
+
+
 def generate(
     params,
     cfg: ModelConfig,
@@ -55,6 +89,7 @@ def generate(
     capacity: Optional[int] = None,
     greedy: bool = True,
     rng: Optional[jax.Array] = None,
+    jit_decode: bool = True,
 ):
     """Prefill on ``batch`` then decode ``max_new_tokens`` greedily.
     Returns (tokens (B, max_new_tokens), final states)."""
@@ -64,7 +99,8 @@ def generate(
     S = tokens_in.shape[1] + (cfg.num_patch_tokens if cfg.family == "vlm" else 0)
     capacity = capacity or (S + max_new_tokens)
 
-    logits_last, raw_states = M.prefill(params, cfg, batch)
+    pf = prefill_fn(cfg) if jit_decode else functools.partial(_prefill, cfg)
+    logits_last, raw_states = pf(params, batch)
     states = states_from_prefill(cfg, raw_states, S, capacity)
 
     def pick(logits, key):
@@ -72,13 +108,18 @@ def generate(
             return jnp.argmax(logits, -1).astype(jnp.int32)
         return jax.random.categorical(key, logits).astype(jnp.int32)
 
+    step = (
+        decode_step_fn(cfg)
+        if jit_decode
+        else functools.partial(_decode_step, cfg)
+    )
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     tok = pick(logits_last, rng)
     outs = [tok]
     pos = jnp.full((Bt,), S, jnp.int32)
     for i in range(max_new_tokens - 1):
         rng, sub = jax.random.split(rng)
-        logits, states = M.decode_step(params, cfg, states, tok, pos + i)
+        logits, states = step(params, states, tok, pos + i)
         tok = pick(logits, sub)
         outs.append(tok)
     return jnp.stack(outs, axis=1), states

@@ -1,0 +1,39 @@
+"""Serving subsystem: continuous-batching inference over the federation's
+merged intermediary models, with merge-round hot-swap.
+
+  engine   fixed-slot continuous batching over one model's decode states
+  traffic  open-loop Poisson / diurnal request generators
+  router   client -> cluster-representative routing + the ReplicaSet shell
+  swap     checkpoint-driven weight hot-swap across merge rounds
+  fl_model the servable LM as an FL_MODELS-shaped training entry
+"""
+from repro.serving.engine import ActiveRequest, ServeEngine
+from repro.serving.router import GLOBAL, ClusterRouter, ReplicaSet
+from repro.serving.swap import (
+    MergeCheckpoint,
+    SwapReport,
+    load_model,
+    swap_replicas,
+)
+from repro.serving.traffic import (
+    LEN_BUCKETS,
+    Request,
+    diurnal_requests,
+    poisson_requests,
+)
+
+__all__ = [
+    "ActiveRequest",
+    "ServeEngine",
+    "GLOBAL",
+    "ClusterRouter",
+    "ReplicaSet",
+    "MergeCheckpoint",
+    "SwapReport",
+    "load_model",
+    "swap_replicas",
+    "LEN_BUCKETS",
+    "Request",
+    "diurnal_requests",
+    "poisson_requests",
+]

@@ -1,0 +1,230 @@
+"""Fixed-slot continuous-batching serving engine.
+
+One :class:`ServeEngine` is one serving *replica*: a weight pytree plus a
+preallocated decode-state arena of ``num_slots`` independent request slots,
+each with ``capacity`` cache positions. Requests are admitted into free
+slots as they arrive (prefill + ``states_from_prefill`` written into the
+slot), every occupied slot advances one token per fused decode step, and
+slots are evicted on EOS / max-tokens — so short and long requests share
+the same compiled program and a new arrival never waits for the previous
+batch to drain. ``launch.serve.generate`` (one lockstep batch, run to
+completion) is the sequential parity oracle this engine is tested against
+token-for-token.
+
+Arena layout (DESIGN.md §10): every decode-state leaf gains a leading
+``num_slots`` axis over a batch=1 model state, i.e. an attention cache leaf
+is ``(num_slots, runL, 1, capacity, Kv, D)`` and per-layer lengths are
+``(num_slots, runL)``. The fused step ``vmap``s the model's single-token
+``decode_step`` over that axis, which keeps *per-slot* cache lengths and
+positions exact — slots at different depths coexist in one jitted program
+(the batched ``decode_step`` alone assumes one shared length). Inactive
+slots still step (fixed shapes, masked on host) — the classic
+fixed-slot-continuous-batching tradeoff of wasted lanes for zero
+recompiles.
+
+Compiled-program discipline: the fused step and the admission program are
+cached per config at module level (shared across replicas — a router fleet
+serving N cluster models compiles each program once), and jax's jit cache
+then keys on shapes. Admission compiles once per distinct prompt length,
+so drivers should bucket prompt lengths (``traffic.LEN_BUCKETS``) to bound
+recompiles. Decoding is greedy (argmax) — the oracle's default.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.serve import states_from_prefill
+from repro.models import model as M
+from repro.serving.traffic import Request
+
+
+@dataclass
+class ActiveRequest:
+    """A request occupying a slot (or finished): generated tokens + timing."""
+    request: Request
+    tokens: List[int] = field(default_factory=list)
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.max_new_tokens or (
+            self.request.eos_id is not None
+            and len(self.tokens) > 0
+            and self.tokens[-1] == self.request.eos_id
+        )
+
+
+@functools.lru_cache(maxsize=32)
+def _fused_step(cfg: ModelConfig):
+    """(params, arena, tok, pos) -> (next_tok (num_slots,), arena).
+
+    vmap of the batch=1 ``decode_step`` over the slot axis: each slot keeps
+    its own cache length / absolute position. The arena is donated — the
+    step updates the KV/recurrent state in place in HBM."""
+
+    def step(params, arena, tok, pos):
+        def one(state, t, p):
+            logits, new_state = M.decode_step(params, cfg, state, t[None], p[None])
+            return logits[0], new_state
+
+        logits, arena = jax.vmap(one)(arena, tok, pos)
+        return jnp.argmax(logits, -1).astype(jnp.int32), arena
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _admit_step(cfg: ModelConfig, capacity: int):
+    """(params, arena, slot, tokens (1, L)) -> (first_tok, arena).
+
+    Prefill + state conversion + write into slot ``slot`` of the arena
+    (donated). jit compiles once per prompt length L."""
+
+    def admit(params, arena, slot, tokens):
+        logits_last, raw = M.prefill(params, cfg, {"tokens": tokens})
+        states = states_from_prefill(cfg, raw, tokens.shape[1], capacity)
+        arena = jax.tree_util.tree_map(
+            lambda a, s: a.at[slot].set(s.astype(a.dtype)), arena, tuple(states)
+        )
+        return jnp.argmax(logits_last[0], -1).astype(jnp.int32), arena
+
+    return jax.jit(admit, donate_argnums=(1,))
+
+
+def _adopt(old, new):
+    """Donated weight adoption for hot swaps: the old replica weights are
+    donated so XLA reuses/free-lists their HBM for the incoming tree."""
+    return jax.tree_util.tree_map(lambda o, n: n.astype(o.dtype), old, new)
+
+
+_adopt_jit = jax.jit(_adopt, donate_argnums=(0,))
+
+
+class ServeEngine:
+    """Continuous-batching replica over one model (see module docstring).
+
+    Host-side bookkeeping is tiny: per-slot ActiveRequest or None, the
+    per-slot last token and next absolute position (the fused step's only
+    per-tick inputs). All model state lives in the donated device arena.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        num_slots: int = 8,
+        capacity: int = 64,
+    ):
+        assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.num_slots = int(num_slots)
+        self.capacity = int(capacity)
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        single = M.init_decode(cfg, 1, capacity)
+        self.arena = jax.tree_util.tree_map(
+            lambda s: jnp.stack([s] * self.num_slots), tuple(single)
+        )
+        self.slots: List[Optional[ActiveRequest]] = [None] * self.num_slots
+        self._tok = np.zeros(self.num_slots, np.int32)
+        self._pos = np.zeros(self.num_slots, np.int32)
+        self.steps = 0          # fused decode steps executed
+        self.swaps = 0          # weight hot-swaps performed
+
+    # ------------------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    # ------------------------------------------------------------------
+    def try_admit(self, req: Request, now: float = 0.0
+                  ) -> Optional[ActiveRequest]:
+        """Admit ``req`` into a free slot: prefill its prompt and write the
+        converted decode state into the arena. Returns the ActiveRequest
+        (already *finished* if max_new_tokens == 1 — the first token comes
+        from prefill), or None when no slot is free."""
+        free = self.free_slots()
+        if not free:
+            return None
+        L = len(req.prompt)
+        if L + req.max_new_tokens > self.capacity:
+            raise ValueError(
+                f"request {req.rid}: prompt {L} + max_new "
+                f"{req.max_new_tokens} exceeds slot capacity {self.capacity}"
+            )
+        slot = free[0]
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        first, self.arena = _admit_step(self.cfg, self.capacity)(
+            self.params, self.arena, slot, tokens
+        )
+        active = ActiveRequest(request=req, tokens=[int(first)],
+                               admitted_at=now)
+        if active.done:
+            active.finished_at = now
+            return active  # never occupies the slot
+        self.slots[slot] = active
+        self._tok[slot] = int(first)
+        self._pos[slot] = L
+        return active
+
+    def step(self, now: float = 0.0) -> List[ActiveRequest]:
+        """One fused decode step over all slots; returns requests that
+        finished this step (their slots are freed). No-op when idle."""
+        if self.num_active == 0:
+            return []
+        nxt, self.arena = _fused_step(self.cfg)(
+            self.params, self.arena, jnp.asarray(self._tok),
+            jnp.asarray(self._pos)
+        )
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        finished: List[ActiveRequest] = []
+        for i, active in enumerate(self.slots):
+            if active is None:
+                continue
+            active.tokens.append(int(nxt[i]))
+            self._tok[i] = int(nxt[i])
+            self._pos[i] += 1
+            if active.done:
+                active.finished_at = now
+                finished.append(active)
+                self.slots[i] = None  # evict; state overwritten on re-admit
+        return finished
+
+    def run_to_completion(self, now: float = 0.0) -> List[ActiveRequest]:
+        """Drain all active slots (no new admissions)."""
+        out: List[ActiveRequest] = []
+        while self.num_active:
+            out.extend(self.step(now))
+        return out
+
+    # ------------------------------------------------------------------
+    def swap_params(self, new_params) -> float:
+        """Hot-swap replica weights between decode steps; returns the stall
+        in seconds (host->device transfer + donated adoption — no
+        recompile: shapes, dtypes and jit caches are unchanged).
+
+        Staleness semantics (DESIGN.md §10): in-flight slots keep their
+        KV/recurrent caches, so their remaining tokens are decoded with
+        NEW weights over caches computed under OLD weights — a bounded
+        staleness window of at most ``capacity`` positions that ends when
+        the slot is evicted. Requests admitted after the swap see the new
+        weights end to end (the hot-swap parity contract tested in
+        tests/test_serving_engine.py)."""
+        import time
+
+        t0 = time.perf_counter()
+        self.params = _adopt_jit(self.params, new_params)
+        jax.block_until_ready(self.params)
+        self.swaps += 1
+        return time.perf_counter() - t0

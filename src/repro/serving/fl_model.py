@@ -1,0 +1,73 @@
+"""The federation <-> serving model bridge: one LM (models/model.py) that
+both the FL simulator can train (init/loss/eval in the FL_MODELS shape)
+and the serving engine can decode (prefill + decode_step on the same
+config/params).
+
+``serve_config`` is the shared truth: the xlstm-125m reduced config in
+float32 (full-precision FL training; the serving stack handles bf16
+checkpoints separately). FL batches stay ``{"x", "y"}`` — ``x`` is the
+(B, L) int32 token block from :mod:`repro.data.tokens`, forwarded to the
+model as ``{"tokens": x}``; ``y`` is the partition label, unused by the
+loss (next-token LM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+SERVE_ARCH = "xlstm-125m"
+
+
+@functools.lru_cache(maxsize=8)
+def serve_config(arch: str = SERVE_ARCH) -> ModelConfig:
+    """The reduced (smoke-scale) serving model config, float32."""
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+
+
+@functools.lru_cache(maxsize=8)
+def _next_token_acc_fn(cfg: ModelConfig):
+    def acc(params, tokens):
+        logits, _aux = M.forward(params, cfg, {"tokens": tokens}, remat=False)
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        return jnp.mean((pred == tokens[:, 1:]).astype(jnp.float32))
+
+    return jax.jit(acc)
+
+
+def lm_accuracy(params, cfg: ModelConfig, tokens) -> float:
+    """Teacher-forced next-token accuracy (the LM stand-in for the toy
+    tasks' classification accuracy — same scale, higher is better)."""
+    tokens = jnp.asarray(np.asarray(tokens, np.int32))
+    return float(_next_token_acc_fn(cfg)(params, tokens))
+
+
+def make_lm_entry(spec, x_te, y_te, arch: str = SERVE_ARCH):
+    """FL_MODELS entry body: (init_fn, loss_fn, eval_fn, acc_fn) for the
+    servable LM. ``spec.data_kwargs['vocab_size']`` (when set) must fit
+    the model's vocabulary — fail fast, not at trace time."""
+    cfg = serve_config(arch)
+    vocab = int(spec.data_kwargs.get("vocab_size", cfg.vocab_size))
+    if vocab > cfg.vocab_size:
+        raise ValueError(
+            f"dataset vocab_size={vocab} exceeds model vocab "
+            f"{cfg.vocab_size} ({arch} reduced)"
+        )
+
+    def loss_fn(params, batch):
+        total, _metrics = M.loss_fn(params, cfg, {"tokens": batch["x"]})
+        return total
+
+    return (
+        lambda key: M.init_params(key, cfg),
+        loss_fn,
+        lambda params: lm_accuracy(params, cfg, x_te),
+        lambda params, x, y: lm_accuracy(params, cfg, x),
+    )

@@ -1,0 +1,108 @@
+"""Cluster-aware request routing: client -> intermediary-node replica.
+
+After a merge round, the paper's intermediary node answers for its group's
+clients (§IV.D). Serving mirrors that: :class:`ClusterRouter` keeps the
+client -> representative map implied by the sequence of merge plans
+(``MergePlan.groups``, i.e. what ``groups_from_assignment`` decodes from
+the engine's device plan), and routes a simulated user to the replica that
+holds their cluster's merged model. Clients never absorbed into any group
+route to the ``GLOBAL`` replica serving the aggregated global model.
+
+Merge plans compose: when representative r1 is itself merged into r2 at a
+later merge round, every client previously assigned to r1 follows it into
+r2 — the map is folded over plans in round order, exactly like the
+simulator's active-mask evolution.
+
+:class:`ReplicaSet` is the thin serving-cluster shell the drivers share:
+replica engines keyed by representative id, one FIFO per replica, and a
+``tick`` that admits what fits and advances every busy engine one token.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import ActiveRequest, ServeEngine
+from repro.serving.traffic import Request
+
+GLOBAL = -1  # router key of the global-model replica
+
+
+class ClusterRouter:
+    def __init__(self, num_clients: int):
+        self.num_clients = int(num_clients)
+        # -1 = unclustered: serve the global model
+        self.rep_of = np.full(self.num_clients, GLOBAL, np.int64)
+
+    def update(self, groups: Iterable[Sequence[int]]) -> None:
+        """Fold one merge plan's groups into the map: group members — and
+        every client previously assigned to a member — now route to the
+        group's representative (member order: representative first)."""
+        for group in groups:
+            rep = int(group[0])
+            members = {int(j) for j in group}
+            follow = np.isin(self.rep_of, list(members))
+            follow |= np.isin(np.arange(self.num_clients), list(members))
+            self.rep_of[follow] = rep
+
+    def replica_for(self, client_id: int) -> int:
+        return int(self.rep_of[client_id])
+
+    def replica_ids(self) -> List[int]:
+        """Distinct representative ids currently routed to (sans GLOBAL)."""
+        reps = sorted(set(self.rep_of.tolist()) - {GLOBAL})
+        return [int(r) for r in reps]
+
+
+class ReplicaSet:
+    """A serving cluster: {replica id: ServeEngine} + per-replica queues."""
+
+    def __init__(self, engines: Dict[int, ServeEngine], router: ClusterRouter):
+        assert GLOBAL in engines, "a GLOBAL replica engine is required"
+        self.engines = dict(engines)
+        self.router = router
+        self.queues: Dict[int, Deque[Request]] = {
+            k: deque() for k in self.engines
+        }
+        self.finished: List[Tuple[int, ActiveRequest]] = []
+
+    def submit(self, req: Request) -> int:
+        """Route ``req`` to its cluster's replica (GLOBAL when the cluster
+        has no live engine, e.g. after a swap dissolved it); returns the
+        chosen replica id."""
+        key = self.router.replica_for(req.client_id)
+        if key not in self.engines:
+            key = GLOBAL
+        self.queues[key].append(req)
+        return key
+
+    def tick(self, now: float = 0.0) -> List[Tuple[int, ActiveRequest]]:
+        """One scheduling round: per replica, admit queued requests into
+        free slots, then advance every busy engine one fused decode step.
+        Returns (replica id, request) pairs that finished this tick."""
+        done: List[Tuple[int, ActiveRequest]] = []
+        for key, eng in self.engines.items():
+            q = self.queues[key]
+            while q and eng.free_slots():
+                active = eng.try_admit(q[0], now=now)
+                if active is None:
+                    break
+                q.popleft()
+                if active.done:  # single-token request finished at admit
+                    done.append((key, active))
+            for fin in eng.step(now=now):
+                done.append((key, fin))
+        self.finished.extend(done)
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return all(len(q) == 0 for q in self.queues.values()) and all(
+            e.num_active == 0 for e in self.engines.values()
+        )
+
+    @property
+    def num_inflight(self) -> int:
+        return sum(e.num_active for e in self.engines.values())

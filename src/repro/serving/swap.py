@@ -1,0 +1,84 @@
+"""Merge-round hot-swap: move a replica set to a newer merge round's
+checkpoints without restarting engines or dropping in-flight requests.
+
+The federation side checkpoints every merge round's intermediary models
+(``FederatedSimulator.on_merge`` -> ``checkpoint.io.save_pytree``, atomic);
+the serving side calls :func:`swap_replicas` between decode steps. Per
+replica the swap is ``ServeEngine.swap_params`` — a donated device
+transfer, no recompile — so the cost is a bounded stall (measured and
+reported per replica) instead of a replica restart.
+
+Weight resolution across merge generations: a replica whose representative
+was itself merged away by the new round adopts the NEW global model (its
+cluster dissolved into another intermediary; the router remap sends its
+*future* traffic to the absorbing representative, while its in-flight
+requests finish on the global weights). Staleness semantics for in-flight
+KV/recurrent caches are documented on ``ServeEngine.swap_params``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.checkpoint.io import load_pytree
+from repro.serving.router import GLOBAL, ReplicaSet
+
+
+@dataclass
+class MergeCheckpoint:
+    """One merge round's serving artifacts, as paths on disk (the bridge
+    from federation to serving is the checkpoint file, never an in-memory
+    pytree — a replica may live in another process)."""
+    round: int
+    rep_paths: Dict[int, str]            # representative id -> ckpt path
+    global_path: str                     # aggregated global model ckpt
+    groups: Tuple[Tuple[int, ...], ...]  # the plan that produced it
+
+
+@dataclass
+class SwapReport:
+    round: int
+    stall_s: Dict[int, float] = field(default_factory=dict)  # per replica
+    inflight_before: int = 0
+    reassigned_to_global: List[int] = field(default_factory=list)
+
+    @property
+    def max_stall_ms(self) -> float:
+        return 1e3 * max(self.stall_s.values(), default=0.0)
+
+    @property
+    def total_stall_ms(self) -> float:
+        return 1e3 * sum(self.stall_s.values())
+
+
+def load_model(path: str, template):
+    """Checkpoint -> model pytree in the template's structure/dtypes."""
+    tree, _step = load_pytree(path, template)
+    return tree
+
+
+def swap_replicas(
+    replicas: ReplicaSet,
+    ckpt: MergeCheckpoint,
+    template,
+    update_router: bool = True,
+) -> SwapReport:
+    """Swap every engine in ``replicas`` to ``ckpt``'s weights and fold the
+    new merge groups into the router map. In-flight requests stay in their
+    slots across the swap (counted in the report so drivers can assert
+    they survive)."""
+    report = SwapReport(round=ckpt.round,
+                        inflight_before=replicas.num_inflight)
+    for key, eng in replicas.engines.items():
+        if key == GLOBAL:
+            path = ckpt.global_path
+        elif key in ckpt.rep_paths:
+            path = ckpt.rep_paths[key]
+        else:
+            # this replica's representative was merged away by ckpt.round
+            path = ckpt.global_path
+            report.reassigned_to_global.append(key)
+        report.stall_s[key] = eng.swap_params(load_model(path, template))
+    if update_router:
+        replicas.router.update(ckpt.groups)
+    return report

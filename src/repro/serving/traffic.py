@@ -1,0 +1,101 @@
+"""Open-loop request generators for the serving benchmarks.
+
+Open-loop means arrival times are drawn up front from the process (Poisson
+or diurnal-modulated Poisson) and requests are submitted at those wall
+times regardless of how far the replicas have gotten — the generator never
+waits for the system, so queueing delay shows up in the measured latency
+instead of being hidden by back-pressure (the standard serving-bench
+methodology).
+
+Prompt lengths are drawn from a small set of buckets (``LEN_BUCKETS`` by
+default): :mod:`repro.serving.engine` compiles its admission program once
+per distinct prompt length, so bucketing bounds the number of compiles a
+trace can trigger. Client ids are drawn uniformly over the federation's
+client population; the router maps them to the replica holding their
+cluster's merged model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+LEN_BUCKETS: Tuple[int, ...] = (4, 8, 16)
+
+
+@dataclass
+class Request:
+    """One inference request from a simulated user of client ``client_id``."""
+    rid: int
+    client_id: int
+    prompt: np.ndarray            # (L,) int32 token ids
+    max_new_tokens: int = 8
+    arrival: float = 0.0          # seconds from trace start (open loop)
+    eos_id: Optional[int] = None  # early-stop token (None = length only)
+
+
+def _make_requests(arrivals: np.ndarray, num_clients: int, vocab_size: int,
+                   len_buckets: Sequence[int], max_new_tokens: int,
+                   rng: np.random.Generator) -> List[Request]:
+    n = len(arrivals)
+    lens = rng.choice(np.asarray(len_buckets), size=n)
+    cids = rng.integers(0, num_clients, size=n)
+    return [
+        Request(
+            rid=i,
+            client_id=int(cids[i]),
+            prompt=rng.integers(0, vocab_size, size=int(lens[i])).astype(
+                np.int32
+            ),
+            max_new_tokens=max_new_tokens,
+            arrival=float(arrivals[i]),
+        )
+        for i in range(n)
+    ]
+
+
+def poisson_requests(
+    n: int,
+    rate: float,
+    num_clients: int,
+    vocab_size: int,
+    len_buckets: Sequence[int] = LEN_BUCKETS,
+    max_new_tokens: int = 8,
+    seed: int = 0,
+) -> List[Request]:
+    """``n`` requests with exponential inter-arrival gaps (mean 1/rate s)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5E44]))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return _make_requests(arrivals, num_clients, vocab_size, len_buckets,
+                          max_new_tokens, rng)
+
+
+def diurnal_requests(
+    n: int,
+    base_rate: float,
+    peak_factor: float,
+    period_s: float,
+    num_clients: int,
+    vocab_size: int,
+    len_buckets: Sequence[int] = LEN_BUCKETS,
+    max_new_tokens: int = 8,
+    seed: int = 0,
+) -> List[Request]:
+    """``n`` arrivals from an inhomogeneous Poisson process whose rate
+    swings sinusoidally between ``base_rate`` and ``base_rate *
+    peak_factor`` with period ``period_s`` (a compressed day), via Lewis
+    thinning against the peak rate."""
+    assert peak_factor >= 1.0
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD1E5]))
+    lam_max = base_rate * peak_factor
+    arrivals = []
+    t = 0.0
+    while len(arrivals) < n:
+        t += rng.exponential(1.0 / lam_max)
+        phase = 0.5 * (1.0 - np.cos(2.0 * np.pi * t / period_s))  # 0..1
+        lam_t = base_rate * (1.0 + (peak_factor - 1.0) * phase)
+        if rng.random() <= lam_t / lam_max:
+            arrivals.append(t)
+    return _make_requests(np.asarray(arrivals), num_clients, vocab_size,
+                          len_buckets, max_new_tokens, rng)

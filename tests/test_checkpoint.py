@@ -47,3 +47,32 @@ def test_missing_leaf_raises(tmp_path):
     save_pytree(p, tree)
     with pytest.raises(KeyError):
         load_pytree(p, {"a": jnp.zeros((3,)), "b": jnp.zeros((1,))})
+
+
+def test_save_exact_path_no_npz_suffix(tmp_path):
+    """np.savez silently appends '.npz' to bare string paths; the atomic
+    writer must land the file at EXACTLY the requested path (swap.py
+    addresses checkpoints by the path it asked save_pytree to write)."""
+    import os
+    tree = {"a": jnp.arange(3.0)}
+    p = str(tmp_path / "ckpt")  # deliberately extensionless
+    save_pytree(p, tree, step=3)
+    assert os.path.exists(p)
+    assert not os.path.exists(p + ".npz")
+    loaded, step = load_pytree(p, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), np.arange(3.0))
+
+
+def test_save_is_atomic_no_tmp_left_and_overwrites(tmp_path):
+    """The tmp file never outlives the save, and an overwrite replaces the
+    old checkpoint in one os.replace (readers see old or new, not a
+    truncated mix)."""
+    import os
+    p = str(tmp_path / "m.npz")
+    save_pytree(p, {"a": jnp.zeros((3,))}, step=1)
+    save_pytree(p, {"a": jnp.ones((3,))}, step=2)
+    assert [f for f in os.listdir(tmp_path) if ".tmp" in f] == []
+    loaded, step = load_pytree(p, {"a": jnp.zeros((3,))})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), np.ones(3))

@@ -79,3 +79,31 @@ def test_encoder_only_generate_rejected(rng):
     params = init_params(rng, cfg)
     with pytest.raises(AssertionError):
         generate(params, cfg, {"tokens": jnp.zeros((1, 4), jnp.int32)})
+
+
+def test_generate_jit_eager_parity(rng):
+    """The cached jitted decode path is token-identical to the eager loop
+    (the retracing fix cannot change what generate emits)."""
+    cfg = _cfg("xlstm-125m")
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)
+    out_j, _ = generate(params, cfg, {"tokens": toks}, max_new_tokens=8,
+                        jit_decode=True)
+    out_e, _ = generate(params, cfg, {"tokens": toks}, max_new_tokens=8,
+                        jit_decode=False)
+    np.testing.assert_array_equal(np.asarray(out_j), np.asarray(out_e))
+
+
+def test_generate_does_not_retrace_per_token(rng):
+    """One decode compile per (config, shapes) — not one per token or per
+    generate call."""
+    from repro.launch.serve import decode_step_fn
+    cfg = _cfg("xlstm-125m")
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    fn = decode_step_fn(cfg)
+    before = fn._cache_size()
+    generate(params, cfg, {"tokens": toks}, max_new_tokens=6)
+    generate(params, cfg, {"tokens": toks}, max_new_tokens=6)
+    assert fn._cache_size() <= before + 1
+    assert decode_step_fn(cfg) is fn  # per-config cache is stable
