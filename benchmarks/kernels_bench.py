@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.decode_attn.ops import decode_attention
 from repro.kernels.decode_attn.ref import decode_attention_ref
 from repro.kernels.pearson.ref import pearson_corr_ref
 
@@ -56,6 +57,26 @@ def run():
     cache_bytes = 2 * B * S * Kv * D * 2  # bf16 on TPU
     rows.append(("decode_attn_ref_cpu_B8_S4096", us,
                  f"tpu_cache_stream_bound_us={cache_bytes/HBM_BW*1e6:.1f}"))
+
+    # decode attention at the *serving arena* shape (ISSUE 9): B = num_slots
+    # rows at ragged depths over an S = capacity cache, GQA geometry — the
+    # exact call `models/layers.attention_decode` issues per layer per fused
+    # step. Reference path vs Pallas path side by side; on CPU the Pallas
+    # kernel runs in interpret mode, so its time is a correctness-path cost,
+    # NOT a hardware number (the analytic TPU bound is the roofline).
+    B, Hq, Kv, D, S = 8, 8, 2, 128, 1024  # qwen3-ish GQA, 8-slot arena
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    ragged = jnp.asarray(rng.integers(8, S + 1, B), jnp.int32)
+    cache_bytes = 2 * B * S * Kv * D * 2
+    bound = f"tpu_cache_stream_bound_us={cache_bytes/HBM_BW*1e6:.1f}"
+    us = _time(jax.jit(decode_attention_ref), q, k, v, ragged)
+    rows.append(("decode_attn_ref_cpu_serving_B8_S1024_ragged", us, bound))
+    pall = lambda *a: decode_attention(*a, backend="interpret")
+    us = _time(pall, q, k, v, ragged)
+    rows.append(("decode_attn_pallas_interpret_serving_B8_S1024_ragged", us,
+                 bound + ";interpret_mode=not_hw_representative"))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -29,13 +29,13 @@ import time
 from repro.launch.serve_fl import run_serving_pipeline
 
 SCHEMA_KEYS = ("meta", "federation", "continuous", "saturated", "oracle",
-               "throughput_speedup")
+               "occupancy_sweep", "throughput_speedup")
 
 
 def check_schema(report: dict) -> None:
     for k in SCHEMA_KEYS:
         assert k in report, f"missing report key: {k}"
-    for k in ("tokens_per_s", "p50_ms", "p99_ms", "swap"):
+    for k in ("tokens_per_s", "p50_ms", "p99_ms", "swap", "rejected"):
         assert k in report["continuous"], f"missing continuous key: {k}"
     swap = report["continuous"]["swap"]
     for k in ("round", "max_stall_ms", "inflight_before",
@@ -46,6 +46,26 @@ def check_schema(report: dict) -> None:
     )
     assert report["saturated"]["tokens_per_s"] > 0
     assert report["oracle"]["tokens_per_s"] > 0
+    # the trace carries one poison (over-capacity) request by construction:
+    # it must be rejected gracefully, not crash the driver loop
+    assert report["continuous"]["rejected"] >= 1
+    # ragged batched vs vmapped occupancy sweep (ISSUE 9 acceptance)
+    sweep = report["occupancy_sweep"]
+    for k in ("arch", "num_slots", "capacity", "per_occupancy",
+              "saturated_speedup", "batched_monotonic"):
+        assert k in sweep, f"missing occupancy_sweep key: {k}"
+    assert len(sweep["per_occupancy"]) == sweep["num_slots"]
+    for row in sweep["per_occupancy"]:
+        for k in ("occupancy", "batched_step_ms", "vmap_step_ms"):
+            assert k in row, f"missing per_occupancy key: {k}"
+    assert sweep["batched_monotonic"], (
+        "batched per-step wall grows as occupancy drops — dead lanes are "
+        "costing attention work again"
+    )
+    assert sweep["saturated_speedup"] >= 1.5, (
+        f"ragged batched step only {sweep['saturated_speedup']}x the "
+        "vmapped step at full occupancy (acceptance: >= 1.5x)"
+    )
 
 
 def run(smoke: bool = False, out: str = "BENCH_serving.json",

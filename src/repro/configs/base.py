@@ -72,6 +72,16 @@ class ModelConfig:
     # hybrid family ("local attn") and as the sub-quadratic variant that
     # unlocks long_500k for dense/vlm archs.
     window_size: int = 0
+    # decode-attention backend for the one-token serving path
+    # (models/layers.attention_decode). Mirrors FLConfig.pearson_backend:
+    #   "auto"      — compiled Pallas flash-decode on TPU/GPU, the masked
+    #                 jnp path on CPU (the parity-oracle numerics)
+    #   "pallas"    — force the compiled Pallas kernel
+    #   "interpret" — force the Pallas kernel in interpret mode (tests)
+    #   "jnp"       — force the masked jnp path
+    # Unknown values raise at the first decode step, never silently fall
+    # back.
+    decode_attn_backend: str = "auto"
 
     # MoE
     num_experts: int = 0

@@ -1,25 +1,76 @@
-"""Jit'd wrapper: GQA layout, padding, window->start conversion."""
+"""Jit'd wrapper: backend selection, GQA layout, padding, window->start
+conversion.
+
+Backend selection mirrors ``FLConfig.pearson_backend`` (DESIGN.md §2):
+
+  "auto"      — compiled Pallas kernel on TPU/GPU, the pure-jnp reference
+                on CPU (compiling the Mosaic kernel there would fail, and
+                interpret mode is orders of magnitude off)
+  "pallas"    — force the compiled Pallas kernel
+  "interpret" — force the Pallas kernel in interpret mode (the CPU
+                correctness path used by tests/test_kernels.py)
+  "reference" — force the pure-jnp oracle (ref.py)
+
+The deprecated ``interpret: bool`` kwarg stays accepted verbatim
+(True == "interpret", False == "pallas"); passing it alongside a
+conflicting explicit ``backend`` raises — never a silently ignored
+override (the merge_at / use_kernel_pearson alias pattern).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.decode_attn.decode_attn import S_BLK, flash_decode
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+_BACKENDS = ("auto", "pallas", "interpret", "reference")
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def decode_attention(q, k, v, lengths, window: int = 0, interpret: bool = True):
-    """q: (B, Hq, D); k, v: (B, S, Kv, D); lengths: (B,) int32.
-    window > 0 = sliding-window (attend to the last ``window`` positions).
-    Returns (B, Hq, D)."""
+def resolve_decode_backend(backend: str = "auto",
+                           interpret: Optional[bool] = None) -> str:
+    """-> one of "pallas" | "interpret" | "reference" for this process."""
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"decode_attention backend must be one of {_BACKENDS}, "
+            f"got {backend!r}"
+        )
+    if interpret is not None:
+        want = "interpret" if interpret else "pallas"
+        if backend not in ("auto", want):
+            raise ValueError(
+                f"conflicting decode_attention backend: backend="
+                f"{backend!r} vs deprecated interpret={interpret} "
+                f"(= {want!r}); set backend only"
+            )
+        return want
+    if backend == "auto":
+        return ("pallas" if jax.default_backend() in ("tpu", "gpu")
+                else "reference")
+    return backend
+
+
+def _serving_s_blk(S: int) -> int:
+    """S block for the kernel grid: 512 for long caches, one lane-aligned
+    block for short serving arenas (padding a 64-position slot cache to
+    512 would make the kernel 8x pure masking)."""
+    if S >= S_BLK:
+        return S_BLK
+    return int(np.ceil(S / 128) * 128)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_blk", "interpret"))
+def _pallas_decode(q, k, v, lengths, window: int, s_blk: int,
+                   interpret: bool):
     B, Hq, D = q.shape
     S, Kv = k.shape[1], k.shape[2]
     G = Hq // Kv
     Gp = int(np.ceil(max(G, 8) / 8) * 8)
-    Sp = int(np.ceil(S / S_BLK) * S_BLK)
+    Sp = int(np.ceil(S / s_blk) * s_blk)
     Dp = int(np.ceil(D / 128) * 128)
 
     # pre-scale by the TRUE head dim (padding would otherwise skew the scale)
@@ -36,5 +87,20 @@ def decode_attention(q, k, v, lengths, window: int = 0, interpret: bool = True):
     else:
         starts = jnp.zeros_like(lengths)
 
-    out = flash_decode(qp, kp, vp, lengths, starts, interpret=interpret)
+    out = flash_decode(qp, kp, vp, lengths, starts, interpret=interpret,
+                       s_blk=s_blk)
     return out[:, :, :G, :D].reshape(B, Hq, D)
+
+
+def decode_attention(q, k, v, lengths, window: int = 0,
+                     backend: str = "auto",
+                     interpret: Optional[bool] = None):
+    """q: (B, Hq, D); k, v: (B, S, Kv, D); lengths: (B,) int32.
+    window > 0 = sliding-window (attend to the last ``window`` positions).
+    Returns (B, Hq, D). Backend selection per module docstring."""
+    resolved = resolve_decode_backend(backend, interpret)
+    if resolved == "reference":
+        return decode_attention_ref(q, k, v, lengths, window=window)
+    return _pallas_decode(q, k, v, lengths, window,
+                          _serving_s_blk(k.shape[1]),
+                          resolved == "interpret")

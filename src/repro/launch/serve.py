@@ -41,7 +41,8 @@ def _attn_cache_from_prefill(cfg, k, v, capacity: int):
         zeros = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], k.dtype)
         ck = jnp.concatenate([k, zeros], axis=2)
         cv = jnp.concatenate([v, zeros], axis=2)
-    length = jnp.full((k.shape[0],), S, jnp.int32)
+    # per-layer, per-row ragged lengths: (runL, Bt)
+    length = jnp.full((k.shape[0], k.shape[1]), S, jnp.int32)
     return {"k": ck, "v": cv, "length": length}
 
 

@@ -200,6 +200,9 @@ def serve_trace(
         "p50_ms": round(1e3 * float(np.percentile(lat, 50)), 2),
         "p99_ms": round(1e3 * float(np.percentile(lat, 99)), 2),
         "steps": {int(k): e.steps for k, e in replicas.engines.items()},
+        # over-capacity requests gracefully turned away mid-trace
+        "rejected": len(replicas.rejected),
+        "rejected_rids": sorted(a.request.rid for _, a in replicas.rejected),
     }
     if swap_report is not None:
         done_rids = {a.request.rid for _, a in finished}
@@ -212,6 +215,74 @@ def serve_trace(
             "reassigned_to_global": swap_report.reassigned_to_global,
         }
     return out
+
+
+def occupancy_sweep(params, cfg, num_slots: int = 8, capacity: int = 256,
+                    prompt_len: int = 8, steps: int = 24,
+                    arch: Optional[str] = None) -> dict:
+    """Per-occupancy fused decode-step wall, ragged batched vs vmapped.
+
+    For each occupancy 1..num_slots: admit that many requests into a fresh
+    engine and time ``steps`` fused decode steps. Run once per
+    ``fused_mode``. Every (occupancy bucket, depth bucket) program is
+    compiled by a throwaway engine driven through the same trajectory
+    first, so the timed pass measures steps, not XLA.
+
+    The two acceptance numbers (ISSUE 9): ``saturated_speedup`` =
+    vmap / batched per-step wall at full occupancy (the vmapped step burns
+    full-capacity attention on every lane; the ragged step only touches
+    the live (rows, depth) bucket), and ``batched_monotonic`` — batched
+    per-step wall must not *increase* as occupancy drops (dead lanes no
+    longer cost attention work)."""
+    arch = arch or cfg.name
+    max_new = steps + 4
+    assert prompt_len + max_new <= capacity, "sweep must fit in capacity"
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(num_slots)]
+
+    def mk_reqs():
+        return [Request(rid=i, client_id=0, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+
+    def run(mode: str, occ: int) -> float:
+        eng = ServeEngine(params, cfg, num_slots=num_slots,
+                          capacity=capacity, fused_mode=mode)
+        for r in mk_reqs()[:occ]:
+            eng.try_admit(r)
+        for _ in range(2):  # settle past the first depth-bucket boundary
+            eng.step()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step()
+        wall = time.perf_counter() - t0
+        return 1e3 * wall / steps
+
+    rows = []
+    for occ in range(1, num_slots + 1):
+        row = {"occupancy": occ}
+        for mode in ("batched", "vmap"):
+            run(mode, occ)  # compile pass: same trajectory, throwaway
+            row[f"{mode}_step_ms"] = round(run(mode, occ), 4)
+        rows.append(row)
+    sat = rows[-1]
+    batched_ms = [r["batched_step_ms"] for r in rows]
+    return {
+        "arch": arch,
+        "num_slots": num_slots,
+        "capacity": capacity,
+        "prompt_len": prompt_len,
+        "steps_timed": steps,
+        "per_occupancy": rows,
+        "saturated_speedup": round(
+            sat["vmap_step_ms"] / sat["batched_step_ms"], 3
+        ),
+        # dead lanes must not cost work: low occupancy no slower than full
+        "batched_monotonic": bool(
+            all(batched_ms[i] <= batched_ms[-1] * 1.25
+                for i in range(len(batched_ms)))
+        ),
+    }
 
 
 def saturated_throughput(params, cfg, requests: List[Request],
@@ -314,6 +385,14 @@ def run_serving_pipeline(
         requests = gen(n_req, rate, **kw)
     else:
         requests = gen(n_req, rate, peak_factor=3.0, period_s=2.0, **kw)
+    # one poison request that can never fit: exercises the graceful-reject
+    # path end to end (the trace must finish, the reject must be counted)
+    mid = requests[len(requests) // 2]
+    requests = requests + [Request(
+        rid=10_000, client_id=mid.client_id,
+        prompt=np.zeros(4, np.int32), max_new_tokens=capacity + 1,
+        arrival=mid.arrival,
+    )]
     warm_trace(replicas, requests)
 
     continuous = serve_trace(replicas, requests, swap_ckpt=ckpts[1],
@@ -323,6 +402,19 @@ def run_serving_pipeline(
                                      num_slots=num_slots, capacity=capacity)
     oracle = sequential_oracle(final_global, cfg, requests,
                                capacity=capacity)
+    # ragged-vs-vmapped occupancy sweep on an *attention* arch (the vmapped
+    # step burns full-capacity attention per lane — the number the ragged
+    # batched path is built to beat)
+    sweep_arch = "qwen3-1.7b"
+    sweep_cfg = serve_config(sweep_arch)
+    sweep_params = M.init_params(jax.random.PRNGKey(1), sweep_cfg)
+    sweep = occupancy_sweep(
+        sweep_params, sweep_cfg,
+        num_slots=4 if smoke else max(num_slots, 8),
+        capacity=256 if smoke else 1024,
+        steps=8 if smoke else 24,
+        arch=sweep_arch,
+    )
     report = {
         "meta": {
             "arch": cfg.name,
@@ -344,6 +436,7 @@ def run_serving_pipeline(
         "continuous": continuous,
         "saturated": saturated,
         "oracle": oracle,
+        "occupancy_sweep": sweep,
         # peak continuous-batching decode rate over the no-batching oracle
         # (the open-loop trace's tokens/sec is arrival-gated, so the
         # saturated engine is the honest throughput comparison)

@@ -115,7 +115,8 @@ def _scores_mask(q_pos, k_pos, causal: bool, window: int):
 
 
 def _attend(q_blk, k, v, mask_blk, cfg):
-    """q_blk (B, sq, Hq, D); k/v (B, T, Kv, D); mask (sq, T) additive."""
+    """q_blk (B, sq, Hq, D); k/v (B, T, Kv, D); mask (sq, T) or per-row
+    (B, sq, T) additive."""
     B, sq, Hq, D = q_blk.shape
     Kv = cfg.num_kv_heads
     G = Hq // Kv
@@ -123,7 +124,9 @@ def _attend(q_blk, k, v, mask_blk, cfg):
     scores = jnp.einsum(
         "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
     ) / np.sqrt(D)
-    scores = scores + mask_blk[None, None, None, :, :]
+    if mask_blk.ndim == 2:
+        mask_blk = mask_blk[None]
+    scores = scores + mask_blk[:, None, None, :, :]
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
     return out.reshape(B, sq, Hq, D)
@@ -217,35 +220,75 @@ def _attention_online(q, k, v, positions, is_causal, window, cfg, q_blk, n_blk):
     return jnp.concatenate(outs, axis=1).reshape(B, S, Hq * D)
 
 
+def _resolve_decode_backend(cfg) -> str:
+    """cfg.decode_attn_backend -> "jnp" | "pallas" | "interpret".
+
+    "auto" picks the compiled Pallas flash-decode kernel on TPU/GPU and the
+    masked-jnp ``_attend`` path on CPU (the latter is bit-identical to the
+    full-sequence numerics, which is what the serving parity oracle needs).
+    Unknown values raise — never a silent fallback."""
+    b = getattr(cfg, "decode_attn_backend", "auto")
+    if b not in ("auto", "pallas", "interpret", "jnp"):
+        raise ValueError(
+            "cfg.decode_attn_backend must be one of "
+            f"('auto', 'pallas', 'interpret', 'jnp'), got {b!r}"
+        )
+    if b == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "jnp"
+    return b
+
+
 def attention_decode(params, cfg, x, cache, pos):
-    """One-token decode. ``cache``: {k,v: (B, C, Kv, D), length: int32[]} with
-    C = window (sliding) or max_len. The new token writes at
-    ``length % C`` (ring buffer when windowed) and attends over valid slots.
-    ``pos`` is the absolute position of the new token."""
+    """One-token ragged decode. ``cache``: {k,v: (B, C, Kv, D),
+    length: int32[B]} with C = window (sliding) or max_len. Row b's new
+    token writes at ``length[b] % C`` (ring buffer when windowed) and
+    attends over that row's valid slots only — rows at different depths
+    share one batched call. ``pos`` (B,) is the absolute position of each
+    row's new token (== length[b] on every production path)."""
     B = x.shape[0]
     q, k, v = _qkv(params, cfg, x, pos[:, None] if pos.ndim == 1 else pos)
     C = cache["k"].shape[1]
-    length = cache["length"]  # int32 scalar: tokens already in cache
-    slot = jnp.mod(length, C)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    length = cache["length"]  # int32 (B,): tokens already in each row's cache
+    slot = jnp.mod(length, C)  # (B,)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0])
+    cv = cache["v"].at[rows, slot].set(v[:, 0])
+    new_cache = {"k": ck, "v": cv, "length": length + 1}
 
-    # absolute position of every cache slot (ring-buffer aware)
-    idx = jnp.arange(C)
-    total = length + 1  # tokens now present
+    backend = _resolve_decode_backend(cfg)
+    if backend != "jnp":
+        # Pallas flash-decode path. Valid slots are exactly
+        # idx < min(length+1, C): with a sliding window, C <= window by
+        # cache construction, so every resident slot is inside the window
+        # and the [0, eff_len) contiguous model matches the ring cache
+        # (attention is permutation-invariant over cached slots — RoPE is
+        # already applied at write time).
+        from repro.kernels.decode_attn.ops import decode_attention
+
+        eff_len = jnp.minimum(length + 1, C).astype(jnp.int32)
+        out = decode_attention(q[:, 0], ck, cv, eff_len, window=0,
+                               backend=backend)
+        y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+        return y, new_cache
+
+    # masked-jnp path: per-row additive mask over the ring cache
+    idx = jnp.arange(C)[None, :]  # (1, C)
+    total = (length + 1)[:, None]  # (B, 1): tokens now present per row
+    slot_b = slot[:, None]
     # slot s holds absolute position: if total <= C: s; else the ring map
     abs_pos = jnp.where(
-        total <= C, idx, jnp.where(idx <= slot, total - 1 - (slot - idx),
-                                   total - 1 - (slot + C - idx))
+        total <= C, idx,
+        jnp.where(idx <= slot_b, total - 1 - (slot_b - idx),
+                  total - 1 - (slot_b + C - idx))
     )
     valid = idx < jnp.minimum(total, C)
     if cfg.window_size > 0:
-        valid &= abs_pos > (pos[0] - cfg.window_size)
-    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]  # (1, C)
+        valid &= abs_pos > (pos[:, None] - cfg.window_size)
+    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, :]
 
     out = _attend(q, ck, cv, mask, cfg)  # (B, 1, Hq, D)
     y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
-    return y, {"k": ck, "v": cv, "length": length + 1}
+    return y, new_cache
 
 
 def attention_init_cache(cfg, batch: int, max_len: int, dtype):
@@ -253,7 +296,7 @@ def attention_init_cache(cfg, batch: int, max_len: int, dtype):
     return {
         "k": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
-        "length": jnp.zeros((), jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
     }
 
 

@@ -1,4 +1,5 @@
-"""Fixed-slot continuous-batching serving engine.
+"""Fixed-slot continuous-batching serving engine with a ragged batched
+decode hot path.
 
 One :class:`ServeEngine` is one serving *replica*: a weight pytree plus a
 preallocated decode-state arena of ``num_slots`` independent request slots,
@@ -11,23 +12,42 @@ batch to drain. ``launch.serve.generate`` (one lockstep batch, run to
 completion) is the sequential parity oracle this engine is tested against
 token-for-token.
 
-Arena layout (DESIGN.md §10): every decode-state leaf gains a leading
-``num_slots`` axis over a batch=1 model state, i.e. an attention cache leaf
-is ``(num_slots, runL, 1, capacity, Kv, D)`` and per-layer lengths are
-``(num_slots, runL)``. The fused step ``vmap``s the model's single-token
-``decode_step`` over that axis, which keeps *per-slot* cache lengths and
-positions exact — slots at different depths coexist in one jitted program
-(the batched ``decode_step`` alone assumes one shared length). Inactive
-slots still step (fixed shapes, masked on host) — the classic
-fixed-slot-continuous-batching tradeoff of wasted lanes for zero
-recompiles.
+Two fused-step modes (DESIGN.md §10):
 
-Compiled-program discipline: the fused step and the admission program are
-cached per config at module level (shared across replicas — a router fleet
-serving N cluster models compiles each program once), and jax's jit cache
-then keys on shapes. Admission compiles once per distinct prompt length,
-so drivers should bucket prompt lengths (``traffic.LEN_BUCKETS``) to bound
-recompiles. Decoding is greedy (argmax) — the oracle's default.
+``fused_mode="batched"`` (default) — the ragged path. The arena is ONE
+batched decode state (every leaf has the slot axis at position 1, under the
+per-run layer axis: an attention cache leaf is ``(runL, num_slots,
+capacity, Kv, D)``, lengths are ``(runL, num_slots)`` int32). One
+``decode_step`` call advances every row; per-row cache lengths
+(``models/layers.attention_decode``) keep slots at different depths exact
+inside the single call. Active rows are kept *prefix-compacted* in
+``[0, num_active)`` (eviction moves the last active row into the hole), so
+the step only runs over an occupancy bucket of ``next_pow2(num_active)``
+rows, and — for full-attention configs — only over a depth bucket of
+``next_pow2(max_pos + 1)`` cache positions. Dead lanes cost nothing; a
+half-empty arena steps roughly twice as fast. Rows inside the bucket
+beyond ``num_active`` carry length 0; the step re-pins their lengths to 0
+after the token-write increment, so they attend over exactly one slot and
+their (discarded) output never grows the work.
+
+``fused_mode="vmap"`` — the parity oracle: the pre-ragged layout (leading
+``num_slots`` axis over batch=1 model states) stepped as a ``vmap`` of the
+batch-1 ``decode_step``. Every lane always runs at full capacity. Kept for
+the batched-vs-vmap token agreement tests and the occupancy-sweep
+baseline in BENCH_serving.json.
+
+Compiled-program discipline: programs are cached per config at module
+level (shared across replicas); jax's jit cache then keys on shapes.
+Admission compiles once per distinct prompt length
+(``traffic.LEN_BUCKETS``); the batched step compiles once per
+(occupancy bucket, depth bucket) — both power-of-two rounded, so at most
+``log2(num_slots) * log2(capacity)`` programs, a handful in practice.
+Decoding is greedy (argmax) — the oracle's default.
+
+Over-capacity requests (prompt + max_new > capacity) are *rejected*, not
+raised: ``try_admit`` returns the ActiveRequest with ``rejected=True`` /
+``done=True`` and no slot is touched, so an open-loop trace survives a
+poison request and the router can count rejects.
 """
 from __future__ import annotations
 
@@ -41,25 +61,172 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.serve import states_from_prefill
+from repro.models import blocks as B
 from repro.models import model as M
 from repro.serving.traffic import Request
+
+FUSED_MODES = ("batched", "vmap")
 
 
 @dataclass
 class ActiveRequest:
-    """A request occupying a slot (or finished): generated tokens + timing."""
+    """A request occupying a slot (or finished/rejected): generated tokens
+    + timing. ``rejected=True`` means the request never ran (over
+    capacity) — ``done`` is immediately True and ``tokens`` stays empty."""
     request: Request
     tokens: List[int] = field(default_factory=list)
     admitted_at: float = 0.0
     finished_at: float = 0.0
+    rejected: bool = False
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.request.max_new_tokens or (
-            self.request.eos_id is not None
-            and len(self.tokens) > 0
-            and self.tokens[-1] == self.request.eos_id
+        return self.rejected or (
+            len(self.tokens) >= self.request.max_new_tokens
+            or (
+                self.request.eos_id is not None
+                and len(self.tokens) > 0
+                and self.tokens[-1] == self.request.eos_id
+            )
         )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# ragged batched-arena programs (fused_mode="batched")
+# ---------------------------------------------------------------------------
+#
+# Arena leaves all carry the slot axis at position 1: (runL, num_slots, ...).
+# The helpers below slice/restore the (occupancy, depth) bucket view; they
+# are structure-driven off ``B.runs(cfg)`` because only attention caches
+# have a depth axis to bucket.
+
+
+def _slice_view(cfg, arena, n_rows: int, s_view: int):
+    """Static (rows, depth) bucket view of the arena (inside jit)."""
+    out = []
+    for (mtype, _n), st in zip(B.runs(cfg), arena):
+        if mtype == "attn":
+            out.append({
+                "k": st["k"][:, :n_rows, :s_view],
+                "v": st["v"][:, :n_rows, :s_view],
+                "length": st["length"][:, :n_rows],
+            })
+        else:
+            out.append(
+                jax.tree_util.tree_map(lambda a: a[:, :n_rows], st)
+            )
+    return tuple(out)
+
+
+def _unslice_view(cfg, arena, view, n_rows: int, s_view: int):
+    """Write a stepped bucket view back into the full (donated) arena."""
+    out = []
+    for (mtype, _n), full, v in zip(B.runs(cfg), arena, view):
+        if mtype == "attn":
+            out.append({
+                "k": full["k"].at[:, :n_rows, :s_view].set(v["k"]),
+                "v": full["v"].at[:, :n_rows, :s_view].set(v["v"]),
+                "length": full["length"].at[:, :n_rows].set(v["length"]),
+            })
+        else:
+            out.append(
+                jax.tree_util.tree_map(
+                    lambda a, b: a.at[:, :n_rows].set(b), full, v
+                )
+            )
+    return tuple(out)
+
+
+def _mask_lengths(cfg, view, active):
+    """Re-pin attention lengths of inactive bucket lanes to 0 (the step
+    just incremented them by the token write)."""
+    out = []
+    for (mtype, _n), st in zip(B.runs(cfg), view):
+        if mtype == "attn":
+            st = dict(st)
+            st["length"] = st["length"] * active[None, :]
+        out.append(st)
+    return tuple(out)
+
+
+def _zero_length_row(cfg, arena, row):
+    """Zero one row's attention lengths (dynamic ``row``, one program)."""
+    out = []
+    for (mtype, _n), st in zip(B.runs(cfg), arena):
+        if mtype == "attn":
+            st = dict(st)
+            keep = (jnp.arange(st["length"].shape[1]) != row).astype(
+                st["length"].dtype
+            )
+            st["length"] = st["length"] * keep[None, :]
+        out.append(st)
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=64)
+def _batched_step(cfg: ModelConfig, n_rows: int, s_view: int):
+    """(params, arena, tok (n_rows,), pos (n_rows,), active (n_rows,))
+    -> (next_tok (n_rows,), arena).
+
+    ONE ragged batched ``decode_step`` over the ``(n_rows, s_view)``
+    bucket of the donated arena — per-row cache lengths do the masking,
+    no per-slot vmap. Compiles once per (occupancy, depth) bucket."""
+
+    def step(params, arena, tok, pos, active):
+        view = _slice_view(cfg, arena, n_rows, s_view)
+        logits, view = M.decode_step(params, cfg, view, tok, pos)
+        view = _mask_lengths(cfg, view, active)
+        arena = _unslice_view(cfg, arena, view, n_rows, s_view)
+        return jnp.argmax(logits, -1).astype(jnp.int32), arena
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _batched_admit(cfg: ModelConfig, capacity: int):
+    """(params, arena, row, tokens (1, L)) -> (first_tok, arena): prefill
+    + state conversion + write into arena row ``row`` (slot axis 1,
+    donated). jit compiles once per prompt length L."""
+
+    def admit(params, arena, row, tokens):
+        logits_last, raw = M.prefill(params, cfg, {"tokens": tokens})
+        states = states_from_prefill(cfg, raw, tokens.shape[1], capacity)
+        arena = jax.tree_util.tree_map(
+            lambda a, s: jax.lax.dynamic_update_index_in_dim(
+                a, s[:, 0].astype(a.dtype), row, axis=1
+            ),
+            arena, tuple(states),
+        )
+        return jnp.argmax(logits_last[0], -1).astype(jnp.int32), arena
+
+    return jax.jit(admit, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _evict_move(cfg: ModelConfig):
+    """(arena, src, dst) -> arena: copy row ``src`` over row ``dst`` and
+    zero row ``src``'s attention lengths (donated; src == dst just zeroes
+    the row). The prefix-compaction primitive — one compiled program, row
+    indices are device scalars."""
+
+    def ev(arena, src, dst):
+        def move(a):
+            r = jax.lax.dynamic_index_in_dim(a, src, axis=1, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(a, r, dst, axis=1)
+
+        arena = jax.tree_util.tree_map(move, arena)
+        return _zero_length_row(cfg, arena, src)
+
+    return jax.jit(ev, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# vmap-of-batch-1 programs (fused_mode="vmap", the parity oracle)
+# ---------------------------------------------------------------------------
 
 
 @functools.lru_cache(maxsize=32)
@@ -122,21 +289,38 @@ class ServeEngine:
         cfg: ModelConfig,
         num_slots: int = 8,
         capacity: int = 64,
+        fused_mode: str = "batched",
     ):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        if fused_mode not in FUSED_MODES:
+            raise ValueError(
+                f"fused_mode must be one of {FUSED_MODES}, got {fused_mode!r}"
+            )
         self.cfg = cfg
+        self.fused_mode = fused_mode
         self.num_slots = int(num_slots)
         self.capacity = int(capacity)
-        self.params = jax.tree_util.tree_map(jnp.asarray, params)
-        single = M.init_decode(cfg, 1, capacity)
-        self.arena = jax.tree_util.tree_map(
-            lambda s: jnp.stack([s] * self.num_slots), tuple(single)
+        # attention cache depth: ring size for windowed configs
+        self._depth = (
+            min(cfg.window_size, self.capacity)
+            if cfg.window_size > 0 else self.capacity
         )
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        if fused_mode == "batched":
+            # one batched decode state, slot axis inside each leaf
+            self.arena = tuple(M.init_decode(cfg, self.num_slots, capacity))
+        else:
+            # stacked batch-1 states, leading slot axis
+            single = M.init_decode(cfg, 1, capacity)
+            self.arena = jax.tree_util.tree_map(
+                lambda s: jnp.stack([s] * self.num_slots), tuple(single)
+            )
         self.slots: List[Optional[ActiveRequest]] = [None] * self.num_slots
         self._tok = np.zeros(self.num_slots, np.int32)
         self._pos = np.zeros(self.num_slots, np.int32)
         self.steps = 0          # fused decode steps executed
         self.swaps = 0          # weight hot-swaps performed
+        self.rejects = 0        # over-capacity requests turned away
 
     # ------------------------------------------------------------------
     @property
@@ -152,36 +336,93 @@ class ServeEngine:
         """Admit ``req`` into a free slot: prefill its prompt and write the
         converted decode state into the arena. Returns the ActiveRequest
         (already *finished* if max_new_tokens == 1 — the first token comes
-        from prefill), or None when no slot is free."""
+        from prefill; ``rejected=True`` if the request can never fit), or
+        None when no slot is free."""
+        L = len(req.prompt)
+        if L + req.max_new_tokens > self.capacity:
+            # over capacity for this engine: graceful reject, no slot state
+            # touched — the driver loop keeps running
+            self.rejects += 1
+            return ActiveRequest(request=req, admitted_at=now,
+                                 finished_at=now, rejected=True)
         free = self.free_slots()
         if not free:
             return None
-        L = len(req.prompt)
-        if L + req.max_new_tokens > self.capacity:
-            raise ValueError(
-                f"request {req.rid}: prompt {L} + max_new "
-                f"{req.max_new_tokens} exceeds slot capacity {self.capacity}"
-            )
+        # batched mode keeps actives prefix-compacted: the first free slot
+        # IS row num_active. vmap mode takes any hole.
         slot = free[0]
         tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-        first, self.arena = _admit_step(self.cfg, self.capacity)(
-            self.params, self.arena, slot, tokens
+        admit = (
+            _batched_admit(self.cfg, self.capacity)
+            if self.fused_mode == "batched"
+            else _admit_step(self.cfg, self.capacity)
         )
+        first, self.arena = admit(self.params, self.arena, slot, tokens)
         active = ActiveRequest(request=req, tokens=[int(first)],
                                admitted_at=now)
         if active.done:
             active.finished_at = now
+            if self.fused_mode == "batched":
+                # the admit wrote real lengths into the row; re-zero them
+                # so the dead lane stays skippable
+                self.arena = _evict_move(self.cfg)(
+                    self.arena, jnp.int32(slot), jnp.int32(slot)
+                )
             return active  # never occupies the slot
         self.slots[slot] = active
         self._tok[slot] = int(first)
         self._pos[slot] = L
         return active
 
-    def step(self, now: float = 0.0) -> List[ActiveRequest]:
-        """One fused decode step over all slots; returns requests that
-        finished this step (their slots are freed). No-op when idle."""
-        if self.num_active == 0:
-            return []
+    # ------------------------------------------------------------------
+    def _step_batched(self, now: float) -> List[ActiveRequest]:
+        na = self.num_active
+        # bucket floor of 2: XLA's batch-1 path is measurably slower than
+        # one masked dead lane on CPU, and the floor halves the program count
+        n_rows = min(max(_next_pow2(na), 2), self.num_slots)
+        if self.cfg.window_size > 0:
+            s_view = self._depth  # ring cache: never depth-sliced
+        else:
+            max_pos = int(self._pos[:na].max())
+            s_view = min(
+                max(_next_pow2(max_pos + 1), min(16, self._depth)),
+                self._depth,
+            )
+        active = np.zeros(n_rows, np.int32)
+        active[:na] = 1
+        nxt, self.arena = _batched_step(self.cfg, n_rows, s_view)(
+            self.params, self.arena,
+            jnp.asarray(self._tok[:n_rows]), jnp.asarray(self._pos[:n_rows]),
+            jnp.asarray(active),
+        )
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        finished: List[ActiveRequest] = []
+        for i in range(na):
+            a = self.slots[i]
+            a.tokens.append(int(nxt[i]))
+            self._tok[i] = int(nxt[i])
+            self._pos[i] += 1
+        # swap-remove evictions, highest row first, to keep the prefix
+        # compact: the last active row fills each hole on device and host
+        done_rows = [i for i in range(na) if self.slots[i].done]
+        cur = na
+        for i in sorted(done_rows, reverse=True):
+            a = self.slots[i]
+            a.finished_at = now
+            finished.append(a)
+            last = cur - 1
+            self.arena = _evict_move(self.cfg)(
+                self.arena, jnp.int32(last), jnp.int32(i)
+            )
+            self.slots[i] = self.slots[last]
+            self.slots[last] = None
+            self._tok[i] = self._tok[last]
+            self._pos[i] = self._pos[last]
+            cur -= 1
+        return finished
+
+    def _step_vmap(self, now: float) -> List[ActiveRequest]:
         nxt, self.arena = _fused_step(self.cfg)(
             self.params, self.arena, jnp.asarray(self._tok),
             jnp.asarray(self._pos)
@@ -200,6 +441,15 @@ class ServeEngine:
                 finished.append(active)
                 self.slots[i] = None  # evict; state overwritten on re-admit
         return finished
+
+    def step(self, now: float = 0.0) -> List[ActiveRequest]:
+        """One fused decode step over all active slots; returns requests
+        that finished this step (their slots are freed). No-op when idle."""
+        if self.num_active == 0:
+            return []
+        if self.fused_mode == "batched":
+            return self._step_batched(now)
+        return self._step_vmap(now)
 
     def run_to_completion(self, now: float = 0.0) -> List[ActiveRequest]:
         """Drain all active slots (no new admissions)."""
@@ -220,7 +470,8 @@ class ServeEngine:
         staleness window of at most ``capacity`` positions that ends when
         the slot is evicted. Requests admitted after the swap see the new
         weights end to end (the hot-swap parity contract tested in
-        tests/test_serving_engine.py)."""
+        tests/test_serving_engine.py). Mode-independent: the arena layout
+        is untouched."""
         import time
 
         t0 = time.perf_counter()

@@ -67,6 +67,8 @@ class ReplicaSet:
             k: deque() for k in self.engines
         }
         self.finished: List[Tuple[int, ActiveRequest]] = []
+        # over-capacity requests the engines turned away (never decoded)
+        self.rejected: List[Tuple[int, ActiveRequest]] = []
 
     def submit(self, req: Request) -> int:
         """Route ``req`` to its cluster's replica (GLOBAL when the cluster
@@ -90,6 +92,9 @@ class ReplicaSet:
                 if active is None:
                     break
                 q.popleft()
+                if active.rejected:  # can never fit: count, keep draining
+                    self.rejected.append((key, active))
+                    continue
                 if active.done:  # single-token request finished at admit
                     done.append((key, active))
             for fin in eng.step(now=now):

@@ -94,6 +94,59 @@ def test_decode_attn_bf16(nprng):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2)
 
 
+def test_decode_attn_backend_selection(nprng):
+    """Backend auto-selection mirrors FLConfig.pearson_backend: "auto"
+    resolves to the jnp reference on CPU, conflicting explicit flags raise,
+    unknown values raise — never a silent fallback."""
+    from repro.kernels.decode_attn.ops import resolve_decode_backend
+
+    B, Hq, Kv, D, S = 2, 8, 2, 64, 256
+    q = jnp.asarray(nprng.normal(size=(B, Hq, D)).astype(np.float32))
+    k = jnp.asarray(nprng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    v = jnp.asarray(nprng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    lengths = jnp.asarray([5, S], jnp.int32)
+
+    # on CPU, "auto" must be the pure-jnp reference, bit for bit
+    assert jax.default_backend() == "cpu"
+    assert resolve_decode_backend("auto") == "reference"
+    out_auto = decode_attention(q, k, v, lengths, backend="auto")
+    out_ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_array_equal(np.asarray(out_auto), np.asarray(out_ref))
+
+    # deprecated interpret kwarg keeps working and maps onto backends
+    out_i = decode_attention(q, k, v, lengths, interpret=True)
+    out_b = decode_attention(q, k, v, lengths, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(out_b))
+
+    # conflicting explicit flags raise
+    with pytest.raises(ValueError, match="conflicting"):
+        decode_attention(q, k, v, lengths, backend="reference",
+                         interpret=True)
+    with pytest.raises(ValueError, match="conflicting"):
+        decode_attention(q, k, v, lengths, backend="interpret",
+                         interpret=False)
+    # non-conflicting combinations resolve
+    assert resolve_decode_backend("interpret", interpret=True) == "interpret"
+    assert resolve_decode_backend("auto", interpret=False) == "pallas"
+    with pytest.raises(ValueError, match="one of"):
+        decode_attention(q, k, v, lengths, backend="mosaic")
+
+
+def test_decode_attn_length_zero_row(nprng):
+    """A length-0 row (dead serving lane) finalizes to zeros, never NaN,
+    and does not disturb live rows."""
+    B, Hq, Kv, D, S = 2, 4, 2, 64, 256
+    q = jnp.asarray(nprng.normal(size=(B, Hq, D)).astype(np.float32))
+    k = jnp.asarray(nprng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    v = jnp.asarray(nprng.normal(size=(B, S, Kv, D)).astype(np.float32))
+    lengths = jnp.asarray([0, 77], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lengths, interpret=True))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out[0], np.zeros_like(out[0]))
+    ref = decode_attention_ref(q[1:], k[1:], v[1:], lengths[1:])
+    np.testing.assert_allclose(out[1], np.asarray(ref)[0], atol=2e-5)
+
+
 def test_decode_attn_short_length(nprng):
     """length = 1: attends to exactly one slot."""
     B, Hq, Kv, D, S = 1, 4, 2, 64, 512

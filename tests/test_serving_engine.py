@@ -122,11 +122,41 @@ def test_eos_and_single_token_finish(params, cfg):
 
 
 def test_admission_capacity_guard(params, cfg):
+    """An over-capacity request is rejected gracefully (marked done, no
+    slot touched, counted) — the driver loop and later admissions
+    proceed."""
     eng = ServeEngine(params, cfg, num_slots=1, capacity=8)
-    with pytest.raises(ValueError):
-        eng.try_admit(Request(rid=0, client_id=0,
+    a = eng.try_admit(Request(rid=0, client_id=0,
                               prompt=np.zeros(6, np.int32),
                               max_new_tokens=4))
+    assert a.rejected and a.done and a.tokens == []
+    assert eng.rejects == 1 and eng.num_active == 0
+    # the engine still serves fitting requests afterwards
+    b = eng.try_admit(Request(rid=1, client_id=0,
+                              prompt=np.zeros(4, np.int32),
+                              max_new_tokens=2))
+    assert not b.rejected
+    eng.run_to_completion()
+    assert len(b.tokens) == 2
+
+
+def test_replica_set_counts_rejects(params, cfg):
+    """A poison request in a routed queue is counted and drained, and the
+    requests behind it still complete."""
+    router = ClusterRouter(2)
+    rs = ReplicaSet(
+        {GLOBAL: ServeEngine(params, cfg, num_slots=2, capacity=CAP)},
+        router,
+    )
+    p = _prompts(cfg)[0]
+    rs.submit(Request(rid=0, client_id=0, prompt=p, max_new_tokens=2))
+    rs.submit(Request(rid=1, client_id=0, prompt=np.zeros(4, np.int32),
+                      max_new_tokens=CAP + 1))  # can never fit
+    rs.submit(Request(rid=2, client_id=0, prompt=p, max_new_tokens=2))
+    while not rs.idle:
+        rs.tick()
+    assert [a.request.rid for _, a in rs.rejected] == [1]
+    assert sorted(a.request.rid for _, a in rs.finished) == [0, 2]
 
 
 # ---------------------------------------------------------------------------
