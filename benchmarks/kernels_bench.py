@@ -12,8 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attn.ops import decode_attention
-from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.kernels.decode_attn.ops import (
+    decode_attention,
+    paged_decode_attention,
+)
+from repro.kernels.decode_attn.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 from repro.kernels.pearson.ref import pearson_corr_ref
 
 HBM_BW = 819e9
@@ -77,6 +83,31 @@ def run():
     us = _time(pall, q, k, v, ragged)
     rows.append(("decode_attn_pallas_interpret_serving_B8_S1024_ragged", us,
                  bound + ";interpret_mode=not_hw_representative"))
+
+    # paged decode attention at the same serving-arena geometry (ISSUE 10):
+    # the S=1024 cache lives in a global page pool addressed through a
+    # MAXIMALLY FRAGMENTED per-row block table (pages dealt round-robin
+    # across rows, so no row owns two adjacent pool pages). Same roofline —
+    # the paged kernel streams the same cache bytes, just gathered — and the
+    # jnp reference's page gather vs the block-table-prefetching Pallas
+    # kernel (interpret mode on CPU: correctness-path cost only).
+    bs = 64  # pages; bounds the interpret-mode grid at T=16 steps/row
+    T = S // bs
+    pool = jnp.asarray(
+        rng.normal(size=(B * T + 1, bs, Kv, D)).astype(np.float32))
+    vpool = jnp.asarray(
+        rng.normal(size=(B * T + 1, bs, Kv, D)).astype(np.float32))
+    # round-robin deal: row b holds pool pages b, b+B, b+2B, ... (stride B)
+    bt = jnp.asarray(
+        np.arange(B * T).reshape(T, B).T.copy(), jnp.int32)
+    us = _time(jax.jit(paged_decode_attention_ref), q, pool, vpool, bt,
+               ragged)
+    rows.append(("decode_attn_paged_ref_cpu_B8_S1024_bs64_fragmented", us,
+                 bound))
+    ppall = lambda *a: paged_decode_attention(*a, backend="interpret")
+    us = _time(ppall, q, pool, vpool, bt, ragged)
+    rows.append(("decode_attn_paged_pallas_interpret_B8_S1024_bs64_fragmented",
+                 us, bound + ";interpret_mode=not_hw_representative"))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -82,6 +82,27 @@ class ModelConfig:
     # Unknown values raise at the first decode step, never silently fall
     # back.
     decode_attn_backend: str = "auto"
+    # admission-time prefill attention backend (the full-sequence pass run
+    # once per admitted request). Mirrors decode_attn_backend:
+    #   "auto"      — kernels/flash_prefill on TPU/GPU, the jnp blocked/
+    #                 online path on CPU
+    #   "pallas"    — force the compiled flash-prefill kernel
+    #   "interpret" — force the kernel in interpret mode (tests)
+    #   "jnp"       — force the jnp path
+    # Only the cache-returning prefill pass uses the kernel (the training
+    # forward stays on the differentiable jnp implementations). Unknown
+    # values raise, never a silent fallback.
+    prefill_backend: str = "auto"
+    # serving KV-cache layout (models/layers.attention_decode + the serving
+    # engine arena):
+    #   "contiguous" — dense per-row (B, capacity) cache axis (the in-tree
+    #                  parity oracle)
+    #   "paged"      — global pool of kv_block_size-position blocks + a
+    #                  per-row block table; row capacity is free-block
+    #                  accounting, not a per-slot constant
+    kv_layout: str = "contiguous"
+    # paged-arena page size: cache positions per KV block
+    kv_block_size: int = 16
 
     # MoE
     num_experts: int = 0

@@ -25,8 +25,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attn.decode_attn import S_BLK, flash_decode
-from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.kernels.decode_attn.decode_attn import (
+    S_BLK,
+    flash_decode,
+    flash_decode_paged,
+)
+from repro.kernels.decode_attn.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 
 _BACKENDS = ("auto", "pallas", "interpret", "reference")
 
@@ -104,3 +111,51 @@ def decode_attention(q, k, v, lengths, window: int = 0,
     return _pallas_decode(q, k, v, lengths, window,
                           _serving_s_blk(k.shape[1]),
                           resolved == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pallas_paged_decode(q, k_pool, v_pool, block_tables, lengths,
+                         interpret: bool):
+    B, Hq, D = q.shape
+    P, bs, Kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    G = Hq // Kv
+    Gp = int(np.ceil(max(G, 8) / 8) * 8)
+    bsp = int(np.ceil(bs / 8) * 8)   # sublane-pad the page axis
+    Dp = int(np.ceil(D / 128) * 128)
+
+    # pre-scale by the TRUE head dim (padding would otherwise skew the scale)
+    qg = (q * (1.0 / np.sqrt(D))).astype(q.dtype).reshape(B, Kv, G, D)
+    qp = jnp.zeros((B, Kv, Gp, Dp), q.dtype).at[:, :, :G, :D].set(qg)
+    kt = jnp.moveaxis(k_pool, 2, 1)  # (P, Kv, bs, D)
+    vt = jnp.moveaxis(v_pool, 2, 1)
+    kp = jnp.zeros((P, Kv, bsp, Dp), k_pool.dtype).at[:, :, :bs, :D].set(kt)
+    vp = jnp.zeros((P, Kv, bsp, Dp), v_pool.dtype).at[:, :, :bs, :D].set(vt)
+
+    out = flash_decode_paged(qp, kp, vp, block_tables.astype(jnp.int32),
+                             lengths.astype(jnp.int32), block_size=bs,
+                             interpret=interpret)
+    return out[:, :, :G, :D].reshape(B, Hq, D)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                           window: int = 0, backend: str = "auto",
+                           interpret: Optional[bool] = None):
+    """Paged flash decode: q (B, Hq, D); k_pool, v_pool (P, bs, Kv, D)
+    global page pools (last block = trash); block_tables (B, T) int32
+    (-1 = unallocated); lengths (B,) int32 over logical slots. Backend
+    selection per module docstring. The ring-cache callers always pass
+    ``window=0`` (every resident slot is inside the window by cache
+    construction — see ``layers.attention_decode``); the kernel therefore
+    only implements length masking, while the reference path keeps the
+    ``window`` kwarg for direct oracle use."""
+    resolved = resolve_decode_backend(backend, interpret)
+    if resolved == "reference":
+        return paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                          lengths, window=window)
+    if window > 0:
+        raise NotImplementedError(
+            "paged flash decode handles windows via ring lengths, not a "
+            "start offset; pass window=0 with window-clamped lengths"
+        )
+    return _pallas_paged_decode(q, k_pool, v_pool, block_tables, lengths,
+                                resolved == "interpret")

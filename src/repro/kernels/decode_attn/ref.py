@@ -26,3 +26,31 @@ def decode_attention_ref(q, k, v, lengths, window: int = 0):
     probs = probs / jnp.sum(probs, -1, keepdims=True)
     out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
     return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def gather_paged_kv(k_pool, v_pool, block_tables):
+    """Materialize each row's logical cache view from the paged pool.
+
+    k_pool, v_pool: (P, bs, Kv, D) — global block pools whose LAST block
+    (id P-1) is the trash block; block_tables: (B, T) int32 with -1 for
+    unallocated entries (resolved to the trash block). Logical slot ``l``
+    of row ``b`` lives at pool block ``block_tables[b, l // bs]``, offset
+    ``l % bs``. Returns (k, v) each (B, T*bs, Kv, D)."""
+    P, bs = k_pool.shape[0], k_pool.shape[1]
+    B, T = block_tables.shape
+    blk = jnp.where(block_tables >= 0, block_tables, P - 1)   # (B, T)
+    # page-level gather (T indices per row), then flatten the page axis —
+    # much cheaper than a per-slot gather of T*bs indices
+    k = k_pool[blk].reshape((B, T * bs) + k_pool.shape[2:])
+    v = v_pool[blk].reshape((B, T * bs) + v_pool.shape[2:])
+    return k, v
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               window: int = 0):
+    """Pure-jnp oracle for the paged flash-decode kernel: gather the
+    table-ordered view, then the contiguous reference — the gather is
+    exact, so numerics are identical to a contiguous cache holding the
+    same slots."""
+    k, v = gather_paged_kv(k_pool, v_pool, block_tables)
+    return decode_attention_ref(q, k, v, lengths, window=window)

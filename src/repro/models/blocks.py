@@ -211,3 +211,25 @@ def init_decode_states(cfg, batch: int, max_len: int, dtype):
             )
         )
     return tuple(out)
+
+
+def init_decode_states_paged(cfg, batch: int, max_row_len: int, dtype,
+                             block_size: int, num_blocks: int):
+    """Paged decode state: attention runs get per-layer page pools plus a
+    shared-shape block table (one logical block id addresses the same page
+    slot in every layer's pool, so a single host-side table drives the
+    whole stack); recurrent runs are identical to the contiguous layout."""
+    out = []
+    for (mtype, count) in runs(cfg):
+        if mtype == "attn":
+            single = L.attention_init_cache_paged(
+                cfg, batch, max_row_len, dtype, block_size, num_blocks
+            )
+        else:
+            single = MIXERS[mtype][3](cfg, batch, max_row_len, dtype)
+        out.append(
+            jax.tree_util.tree_map(
+                lambda s: jnp.broadcast_to(s, (count,) + s.shape), single
+            )
+        )
+    return tuple(out)

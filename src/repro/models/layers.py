@@ -132,14 +132,46 @@ def _attend(q_blk, k, v, mask_blk, cfg):
     return out.reshape(B, sq, Hq, D)
 
 
+def _resolve_prefill_backend(cfg) -> str:
+    """cfg.prefill_backend -> "jnp" | "pallas" | "interpret".
+
+    Mirrors ``_resolve_decode_backend``: "auto" picks the compiled
+    flash-prefill kernel on TPU/GPU and the jnp blocked/online path on
+    CPU. Unknown values raise — never a silent fallback."""
+    b = getattr(cfg, "prefill_backend", "auto")
+    if b not in ("auto", "pallas", "interpret", "jnp"):
+        raise ValueError(
+            "cfg.prefill_backend must be one of "
+            f"('auto', 'pallas', 'interpret', 'jnp'), got {b!r}"
+        )
+    if b == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "jnp"
+    return b
+
+
 def attention_fwd(params, cfg, x, positions, causal: bool = True,
                   return_cache: bool = False):
     """Full-sequence attention (train / prefill). Scans over query blocks so
-    peak score memory is (B, heads, Q_BLOCK, T)."""
+    peak score memory is (B, heads, Q_BLOCK, T).
+
+    The cache-returning pass (serving admission prefill) can route through
+    ``kernels/flash_prefill`` via ``cfg.prefill_backend``; the training
+    forward always stays on the differentiable jnp implementations."""
     B, S, _ = x.shape
     q, k, v = _qkv(params, cfg, x, positions)
     window = cfg.window_size
     is_causal = causal and not cfg.is_encoder
+
+    prefill_backend = _resolve_prefill_backend(cfg) if return_cache else "jnp"
+    if prefill_backend != "jnp":
+        from repro.kernels.flash_prefill.ops import flash_prefill_attention
+
+        out = flash_prefill_attention(
+            q, k, v, causal=is_causal, window=window,
+            interpret=(prefill_backend == "interpret"),
+        )
+        y = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+        return y, {"k": k, "v": v}
 
     q_blk = min(Q_BLOCK, S)
     if S % q_blk != 0:  # fall back to one block for odd smoke shapes
@@ -238,13 +270,46 @@ def _resolve_decode_backend(cfg) -> str:
     return b
 
 
+def _ring_decode_mask(length, slot, C, pos, window, width=None):
+    """Per-row additive decode mask over a ring cache of logical size C.
+
+    ``width`` is the physical number of cached slots in the attended view
+    (defaults to C; the paged view is T*block_size >= C when the page size
+    does not divide C). Slots >= C are never written and stay masked, so
+    widening the view only appends exactly-masked columns."""
+    W = C if width is None else width
+    idx = jnp.arange(W)[None, :]  # (1, W)
+    total = (length + 1)[:, None]  # (B, 1): tokens now present per row
+    slot_b = slot[:, None]
+    # slot s holds absolute position: if total <= C: s; else the ring map
+    abs_pos = jnp.where(
+        total <= C, idx,
+        jnp.where(idx <= slot_b, total - 1 - (slot_b - idx),
+                  total - 1 - (slot_b + C - idx))
+    )
+    valid = idx < jnp.minimum(total, C)
+    if window > 0:
+        valid &= abs_pos > (pos[:, None] - window)
+    return jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, :]
+
+
 def attention_decode(params, cfg, x, cache, pos):
-    """One-token ragged decode. ``cache``: {k,v: (B, C, Kv, D),
-    length: int32[B]} with C = window (sliding) or max_len. Row b's new
-    token writes at ``length[b] % C`` (ring buffer when windowed) and
-    attends over that row's valid slots only — rows at different depths
-    share one batched call. ``pos`` (B,) is the absolute position of each
-    row's new token (== length[b] on every production path)."""
+    """One-token ragged decode.
+
+    Contiguous layout — ``cache``: {k,v: (B, C, Kv, D), length: int32[B]}
+    with C = window (sliding) or max_len. Row b's new token writes at
+    ``length[b] % C`` (ring buffer when windowed) and attends over that
+    row's valid slots only — rows at different depths share one batched
+    call. ``pos`` (B,) is the absolute position of each row's new token
+    (== length[b] on every production path).
+
+    Paged layout — ``cache``: {k,v: (P+1, bs, Kv, D) global page pools
+    (last block = trash), block_tables: int32[B, T] (-1 = unallocated),
+    length: int32[B]}; dispatched by the ``block_tables`` key. Logical
+    slot l of row b lives at pool page ``block_tables[b, l // bs]``,
+    offset ``l % bs`` — same ring semantics, one indirection deeper."""
+    if "block_tables" in cache:
+        return _attention_decode_paged(params, cfg, x, cache, pos)
     B = x.shape[0]
     q, k, v = _qkv(params, cfg, x, pos[:, None] if pos.ndim == 1 else pos)
     C = cache["k"].shape[1]
@@ -272,21 +337,60 @@ def attention_decode(params, cfg, x, cache, pos):
         return y, new_cache
 
     # masked-jnp path: per-row additive mask over the ring cache
-    idx = jnp.arange(C)[None, :]  # (1, C)
-    total = (length + 1)[:, None]  # (B, 1): tokens now present per row
-    slot_b = slot[:, None]
-    # slot s holds absolute position: if total <= C: s; else the ring map
-    abs_pos = jnp.where(
-        total <= C, idx,
-        jnp.where(idx <= slot_b, total - 1 - (slot_b - idx),
-                  total - 1 - (slot_b + C - idx))
-    )
-    valid = idx < jnp.minimum(total, C)
-    if cfg.window_size > 0:
-        valid &= abs_pos > (pos[:, None] - cfg.window_size)
-    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, :]
-
+    mask = _ring_decode_mask(length, slot, C, pos, cfg.window_size)
     out = _attend(q, ck, cv, mask, cfg)  # (B, 1, Hq, D)
+    y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return y, new_cache
+
+
+def _attention_decode_paged(params, cfg, x, cache, pos):
+    """Paged one-token decode: write the new token's k/v through the block
+    table into the global page pools, then attend over the row's logical
+    slots. A row whose write lands on an unallocated table entry (-1 —
+    only inactive lanes; live rows hold their full page reservation from
+    admission) is redirected to the trash page, so it can never corrupt
+    another row's pages."""
+    B = x.shape[0]
+    q, k, v = _qkv(params, cfg, x, pos[:, None] if pos.ndim == 1 else pos)
+    k_pool, v_pool = cache["k"], cache["v"]  # (P+1, bs, Kv, D)
+    bt = cache["block_tables"]               # (B, T) int32
+    bs = k_pool.shape[1]
+    W = bt.shape[1] * bs                     # physical slots in the view
+    # logical ring size: same rule as the contiguous cache. W may exceed
+    # min(window, max_row_len) by page-size rounding; slots >= C are never
+    # written and stay masked.
+    C = min(cfg.window_size, W) if cfg.window_size > 0 else W
+    length = cache["length"]
+    slot = jnp.mod(length, C)                # (B,) logical write slot
+    rows = jnp.arange(B)
+    trash = k_pool.shape[0] - 1
+    wblk = bt[rows, slot // bs]
+    wblk = jnp.where(wblk >= 0, wblk, trash)
+    ck = k_pool.at[wblk, slot % bs].set(k[:, 0])
+    cv = v_pool.at[wblk, slot % bs].set(v[:, 0])
+    new_cache = {"k": ck, "v": cv, "block_tables": bt, "length": length + 1}
+
+    backend = _resolve_decode_backend(cfg)
+    if backend != "jnp":
+        # window handled via ring lengths: every resident slot is inside
+        # the window by cache construction (see the contiguous path), so
+        # the kernel only needs length masking.
+        from repro.kernels.decode_attn.ops import paged_decode_attention
+
+        eff_len = jnp.minimum(length + 1, C).astype(jnp.int32)
+        out = paged_decode_attention(q[:, 0], ck, cv, bt, eff_len, window=0,
+                                     backend=backend)
+        y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+        return y, new_cache
+
+    # masked-jnp path: gather the table-ordered view, then the identical
+    # ring mask as the contiguous cache (extra page-rounding columns are
+    # exactly masked)
+    from repro.kernels.decode_attn.ref import gather_paged_kv
+
+    gk, gv = gather_paged_kv(ck, cv, bt)     # (B, W, Kv, D)
+    mask = _ring_decode_mask(length, slot, C, pos, cfg.window_size, width=W)
+    out = _attend(q, gk, gv, mask, cfg)      # (B, 1, Hq, D)
     y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
     return y, new_cache
 
@@ -296,6 +400,24 @@ def attention_init_cache(cfg, batch: int, max_len: int, dtype):
     return {
         "k": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def attention_init_cache_paged(cfg, batch: int, max_row_len: int, dtype,
+                               block_size: int, num_blocks: int):
+    """Paged arena: ``num_blocks`` allocatable pages plus one trailing
+    trash page (id ``num_blocks``) that absorbs writes routed through
+    unallocated (-1) table entries. Per-row table capacity covers the
+    logical ring C = min(max_row_len, window)."""
+    C = min(max_row_len, cfg.window_size) if cfg.window_size > 0 else max_row_len
+    T = -(-C // block_size)
+    return {
+        "k": jnp.zeros((num_blocks + 1, block_size, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((num_blocks + 1, block_size, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "block_tables": jnp.full((batch, T), -1, jnp.int32),
         "length": jnp.zeros((batch,), jnp.int32),
     }
 

@@ -109,6 +109,14 @@ def init_decode(cfg, batch: int, max_len: int):
     return B.init_decode_states(cfg, batch, max_len, param_dtype(cfg))
 
 
+def init_decode_paged(cfg, batch: int, max_row_len: int, block_size: int,
+                      num_blocks: int):
+    """Paged serving arena: attention caches become global page pools with
+    per-row block tables (see layers.attention_init_cache_paged)."""
+    return B.init_decode_states_paged(cfg, batch, max_row_len,
+                                      param_dtype(cfg), block_size, num_blocks)
+
+
 def prefill(params, cfg, batch):
     """Full forward that also returns per-layer decode states."""
     logits, states, _aux = forward(params, cfg, batch, return_state=True, remat=False)

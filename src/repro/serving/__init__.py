@@ -2,18 +2,23 @@
 merged intermediary models, with merge-round hot-swap.
 
   engine   fixed-slot continuous batching over one model's decode states
+           (contiguous or paged KV arena)
+  paging   host-side KV page allocator for the paged arena
   traffic  open-loop Poisson / diurnal request generators
   router   client -> cluster-representative routing + the ReplicaSet shell
   swap     checkpoint-driven weight hot-swap across merge rounds
   fl_model the servable LM as an FL_MODELS-shaped training entry
 """
-from repro.serving.engine import ActiveRequest, ServeEngine
+from repro.serving.engine import POISON_VALUE, ActiveRequest, ServeEngine
+from repro.serving.paging import BlockAllocator
 from repro.serving.router import GLOBAL, ClusterRouter, ReplicaSet
 from repro.serving.swap import (
+    CheckpointWatcher,
     MergeCheckpoint,
     SwapReport,
     load_model,
     swap_replicas,
+    write_checkpoint_manifest,
 )
 from repro.serving.traffic import (
     LEN_BUCKETS,
@@ -25,13 +30,17 @@ from repro.serving.traffic import (
 __all__ = [
     "ActiveRequest",
     "ServeEngine",
+    "POISON_VALUE",
+    "BlockAllocator",
     "GLOBAL",
     "ClusterRouter",
     "ReplicaSet",
+    "CheckpointWatcher",
     "MergeCheckpoint",
     "SwapReport",
     "load_model",
     "swap_replicas",
+    "write_checkpoint_manifest",
     "LEN_BUCKETS",
     "Request",
     "diurnal_requests",

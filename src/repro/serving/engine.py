@@ -48,12 +48,32 @@ Over-capacity requests (prompt + max_new > capacity) are *rejected*, not
 raised: ``try_admit`` returns the ActiveRequest with ``rejected=True`` /
 ``done=True`` and no slot is touched, so an open-loop trace survives a
 poison request and the router can count rejects.
+
+``kv_layout="paged"`` (batched mode only) replaces the dense per-row
+cache axis with a global pool of ``kv_block_size``-position KV pages plus
+a host-authoritative per-row block table (``serving/paging.BlockAllocator``
+owns the free list). Admission becomes free-block accounting: a request
+needs ceil((L + max_new) / bs) pages reserved up front — so a request
+longer than one slot's ``capacity`` is admissible as long as the shared
+pool has pages (``over_capacity_admits`` counts those), and only
+``L + max_new > num_slots * capacity`` is a hard reject. Admission draws
+the full reservation immediately (worst-case reservation means lazy
+per-step draws add capacity for no one — they only churn the table;
+eager draws keep the table immutable across a row's whole decode, so the
+device table upload caches between admissions); eviction returns a row's
+pages to the free list. The pool holds exactly ``num_slots * capacity``
+positions (plus one trash page), so paged-vs-contiguous comparisons are
+iso-memory. ``debug_poison_evictions=True`` fills freed pages with a
+finite sentinel (``POISON_VALUE``) so any read-after-free shifts decoded
+tokens and fails the parity tests; the sentinel is deliberately NOT NaN —
+the additive -1e30 decode mask must keep exactly-masked poison at zero
+weight, and NaN would propagate through masked lanes of correct code.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,9 +83,17 @@ from repro.configs.base import ModelConfig
 from repro.launch.serve import states_from_prefill
 from repro.models import blocks as B
 from repro.models import model as M
+from repro.serving.paging import BlockAllocator
 from repro.serving.traffic import Request
 
 FUSED_MODES = ("batched", "vmap")
+KV_LAYOUTS = ("contiguous", "paged")
+
+# eviction poison sentinel: large enough that a stale read (a block-table /
+# allocator bug) visibly shifts attention outputs and decoded tokens, small
+# enough (<< 1e23 = ulp of the -1e30 mask) that exactly-masked poison still
+# softmaxes to exactly zero weight
+POISON_VALUE = 1e4
 
 
 @dataclass
@@ -225,6 +253,207 @@ def _evict_move(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# paged-arena programs (kv_layout="paged")
+# ---------------------------------------------------------------------------
+#
+# Arena layout: attention runs hold {k, v: (runL, P+1, bs, Kv, D) page
+# pools, length: (runL, num_slots)}; recurrent runs keep the contiguous
+# (runL, num_slots, ...) layout. Block tables live on the HOST (the engine's
+# ``_bt``) and are passed into each program — the device never owns them,
+# so allocator moves are plain numpy writes, not compiled programs.
+
+
+@functools.lru_cache(maxsize=32)
+def _paged_admit(cfg: ModelConfig):
+    """(params, arena, row, tokens (1, L), bt_row (T,)) -> (first_tok,
+    arena): prefill + ring-cache conversion, then scatter the row's cache
+    pages through its block table into the page pools (unallocated -1
+    entries land on the trash page). jit compiles once per prompt length."""
+
+    def admit(params, arena, row, tokens, bt_row):
+        logits_last, raw = M.prefill(params, cfg, {"tokens": tokens})
+        L = tokens.shape[1]
+        T = bt_row.shape[0]
+        bs = _pool_bs(arena, cfg)
+        # only the prompt's pages hold data (the row's full reservation is
+        # allocated, but pages past the prompt are written by decode before
+        # they are ever attended) — convert and scatter just the live
+        # pages, not the full row-capacity table. Ring placement is
+        # unchanged: the live ring C' = min(window, n_live * bs) puts
+        # every resident slot where the full T * bs table would (wrap only
+        # happens once L > window, and then both rings equal the window).
+        live = min(L, cfg.window_size) if cfg.window_size > 0 else L
+        n_live = min(-(-live // bs), T)
+        out = []
+        for (mtype, _n), full, st in zip(B.runs(cfg), arena,
+                                         states_from_prefill(
+                                             cfg, raw, L, n_live * bs)):
+            if mtype == "attn":
+                trash = full["k"].shape[1] - 1
+                blk = jnp.where(bt_row[:n_live] >= 0, bt_row[:n_live], trash)
+                C = st["k"].shape[2]
+                runL = st["k"].shape[0]
+
+                def pages(a, s):
+                    s = s[:, 0].astype(a.dtype)      # (runL, C, Kv, D)
+                    if C < n_live * bs:  # page rounding: pad dead tail slots
+                        pad = jnp.zeros((runL, n_live * bs - C) + s.shape[2:],
+                                        a.dtype)
+                        s = jnp.concatenate([s, pad], axis=1)
+                    return s.reshape((runL, n_live, bs) + s.shape[2:])
+
+                out.append({
+                    "k": full["k"].at[:, blk].set(pages(full["k"], st["k"])),
+                    "v": full["v"].at[:, blk].set(pages(full["v"], st["v"])),
+                    "length": jax.lax.dynamic_update_index_in_dim(
+                        full["length"], st["length"][:, 0], row, axis=1
+                    ),
+                })
+            else:
+                out.append(jax.tree_util.tree_map(
+                    lambda a, s: jax.lax.dynamic_update_index_in_dim(
+                        a, s[:, 0].astype(a.dtype), row, axis=1
+                    ),
+                    full, st,
+                ))
+        return (jnp.argmax(logits_last[0], -1).astype(jnp.int32),
+                tuple(out))
+
+    return jax.jit(admit, donate_argnums=(1,))
+
+
+def _pool_bs(arena, cfg) -> int:
+    """Page size from the first attention run's pool shape."""
+    for (mtype, _n), st in zip(B.runs(cfg), arena):
+        if mtype == "attn":
+            return st["k"].shape[2]
+    return 1  # no attention caches: page size is irrelevant
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_step(cfg: ModelConfig, n_rows: int, t_view: int):
+    """(params, arena, tok, pos, active, bt (n_rows, t_view)) ->
+    (next_tok (n_rows,), arena).
+
+    ONE ragged batched ``decode_step`` over the occupancy bucket; the
+    host block table is broadcast to the per-layer cache dicts and dropped
+    from the returned arena. ``t_view`` is the depth bucket in PAGES —
+    rows deeper than ``t_view * bs`` never occur inside the bucket, so
+    slicing table columns is exact."""
+
+    def step(params, arena, tok, pos, active, bt):
+        view = []
+        for (mtype, _n), st in zip(B.runs(cfg), arena):
+            if mtype == "attn":
+                runL = st["length"].shape[0]
+                view.append({
+                    "k": st["k"], "v": st["v"],
+                    "block_tables": jnp.broadcast_to(
+                        bt[None], (runL, n_rows, t_view)
+                    ),
+                    "length": st["length"][:, :n_rows],
+                })
+            else:
+                view.append(
+                    jax.tree_util.tree_map(lambda a: a[:, :n_rows], st)
+                )
+        logits, new_view = M.decode_step(params, cfg, tuple(view), tok, pos)
+        new_view = _mask_lengths(cfg, new_view, active)
+        out = []
+        for (mtype, _n), full, v in zip(B.runs(cfg), arena, new_view):
+            if mtype == "attn":
+                out.append({
+                    "k": v["k"], "v": v["v"],  # pools updated in place
+                    "length": full["length"].at[:, :n_rows].set(v["length"]),
+                })
+            else:
+                out.append(jax.tree_util.tree_map(
+                    lambda a, b: a.at[:, :n_rows].set(b), full, v
+                ))
+        return jnp.argmax(logits, -1).astype(jnp.int32), tuple(out)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _paged_evict(cfg: ModelConfig):
+    """(arena, src, dst) -> arena: the paged counterpart of ``_evict_move``.
+    Pages are freed host-side by the allocator, so on device only the
+    attention *lengths* move (src row's length into dst, src zeroed);
+    recurrent-state rows move exactly as in the contiguous arena."""
+
+    def ev(arena, src, dst):
+        out = []
+        for (mtype, _n), st in zip(B.runs(cfg), arena):
+            if mtype == "attn":
+                ln = st["length"]
+                r = jax.lax.dynamic_index_in_dim(ln, src, axis=1,
+                                                 keepdims=False)
+                ln = jax.lax.dynamic_update_index_in_dim(ln, r, dst, axis=1)
+                keep = (jnp.arange(ln.shape[1]) != src).astype(ln.dtype)
+                out.append(dict(st, length=ln * keep[None, :]))
+            else:
+                def move(a):
+                    r = jax.lax.dynamic_index_in_dim(a, src, axis=1,
+                                                     keepdims=False)
+                    return jax.lax.dynamic_update_index_in_dim(a, r, dst,
+                                                               axis=1)
+
+                out.append(jax.tree_util.tree_map(move, st))
+        return tuple(out)
+
+    return jax.jit(ev, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=32)
+def _poison_blocks(cfg: ModelConfig):
+    """(arena, mask (P+1,) bool) -> arena with masked pool pages filled
+    with POISON_VALUE in every attention run (debug_poison_evictions)."""
+
+    def poison(arena, mask):
+        out = []
+        for (mtype, _n), st in zip(B.runs(cfg), arena):
+            if mtype == "attn":
+                m = mask[None, :, None, None, None]
+                out.append(dict(
+                    st,
+                    k=jnp.where(m, jnp.asarray(POISON_VALUE, st["k"].dtype),
+                                st["k"]),
+                    v=jnp.where(m, jnp.asarray(POISON_VALUE, st["v"].dtype),
+                                st["v"]),
+                ))
+            else:
+                out.append(st)
+        return tuple(out)
+
+    return jax.jit(poison, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=32)
+def _poison_row(cfg: ModelConfig):
+    """(arena, row) -> arena with row ``row``'s contiguous attention cache
+    filled with POISON_VALUE (the contiguous-layout debug poison: admits
+    overwrite the whole row, so stale reads can only come from bugs)."""
+
+    def poison(arena, row):
+        out = []
+        for (mtype, _n), st in zip(B.runs(cfg), arena):
+            if mtype == "attn":
+                def fill(a):
+                    r = jnp.full(a.shape[:1] + a.shape[2:], POISON_VALUE,
+                                 a.dtype)
+                    return jax.lax.dynamic_update_index_in_dim(a, r, row,
+                                                               axis=1)
+
+                out.append(dict(st, k=fill(st["k"]), v=fill(st["v"])))
+            else:
+                out.append(st)
+        return tuple(out)
+
+    return jax.jit(poison, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
 # vmap-of-batch-1 programs (fused_mode="vmap", the parity oracle)
 # ---------------------------------------------------------------------------
 
@@ -290,6 +519,9 @@ class ServeEngine:
         num_slots: int = 8,
         capacity: int = 64,
         fused_mode: str = "batched",
+        kv_layout: Optional[str] = None,
+        block_size: Optional[int] = None,
+        debug_poison_evictions: bool = False,
     ):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
         if fused_mode not in FUSED_MODES:
@@ -300,13 +532,72 @@ class ServeEngine:
         self.fused_mode = fused_mode
         self.num_slots = int(num_slots)
         self.capacity = int(capacity)
+        self.kv_layout = (kv_layout if kv_layout is not None
+                          else getattr(cfg, "kv_layout", "contiguous"))
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"kv_layout must be one of {KV_LAYOUTS}, got "
+                f"{self.kv_layout!r}"
+            )
+        self.block_size = int(block_size if block_size is not None
+                              else getattr(cfg, "kv_block_size", 16))
+        self.debug_poison = bool(debug_poison_evictions)
+        if self.debug_poison and fused_mode == "vmap":
+            raise ValueError(
+                "debug_poison_evictions requires fused_mode='batched' "
+                "(the vmap arena has no row-poison program)"
+            )
         # attention cache depth: ring size for windowed configs
         self._depth = (
             min(cfg.window_size, self.capacity)
             if cfg.window_size > 0 else self.capacity
         )
         self.params = jax.tree_util.tree_map(jnp.asarray, params)
-        if fused_mode == "batched":
+        self.over_capacity_admits = 0  # paged admits a contiguous reject
+        if self.kv_layout == "paged":
+            if fused_mode != "batched":
+                raise ValueError(
+                    "kv_layout='paged' requires fused_mode='batched' "
+                    "(the vmap oracle keeps the contiguous layout)"
+                )
+            # iso-memory with the contiguous arena: the pool holds exactly
+            # num_slots * capacity positions; one row may draw all of them
+            self.max_row_len = self.num_slots * self.capacity
+            self._row_cap = (
+                min(cfg.window_size, self.max_row_len)
+                if cfg.window_size > 0 else self.max_row_len
+            )
+            self._table_len = -(-self._row_cap // self.block_size)
+            self.pool_blocks = -(-self.num_slots * self.capacity
+                                 // self.block_size)
+            self.allocator = BlockAllocator(self.pool_blocks)
+            self._has_attn = any(m == "attn" for m, _ in B.runs(cfg))
+            self._bt = np.full((self.num_slots, self._table_len), -1,
+                               np.int32)
+            self._row_blocks: List[List[int]] = [
+                [] for _ in range(self.num_slots)
+            ]
+            # device-side table cache: tables mutate on admit/evict only
+            # (rows draw their full reservation at admission), so every
+            # pure-decode step reuses the previous upload instead of
+            # re-slicing + re-transferring every tick
+            self._bt_version = 0
+            self._bt_dev: Dict[Tuple[int, int], Tuple[int, jnp.ndarray]] = {}
+            # strip block tables from the device arena: the host table is
+            # authoritative and enters each program as an argument
+            arena = []
+            for (mtype, _n), st in zip(
+                B.runs(cfg),
+                M.init_decode_paged(cfg, self.num_slots, self.max_row_len,
+                                    self.block_size, self.pool_blocks),
+            ):
+                if mtype == "attn":
+                    arena.append({"k": st["k"], "v": st["v"],
+                                  "length": st["length"]})
+                else:
+                    arena.append(st)
+            self.arena = tuple(arena)
+        elif fused_mode == "batched":
             # one batched decode state, slot axis inside each leaf
             self.arena = tuple(M.init_decode(cfg, self.num_slots, capacity))
         else:
@@ -337,7 +628,10 @@ class ServeEngine:
         converted decode state into the arena. Returns the ActiveRequest
         (already *finished* if max_new_tokens == 1 — the first token comes
         from prefill; ``rejected=True`` if the request can never fit), or
-        None when no slot is free."""
+        None when no slot is free (paged: or the page pool cannot cover
+        the request's worst-case reservation)."""
+        if self.kv_layout == "paged":
+            return self._try_admit_paged(req, now)
         L = len(req.prompt)
         if L + req.max_new_tokens > self.capacity:
             # over capacity for this engine: graceful reject, no slot state
@@ -368,11 +662,84 @@ class ServeEngine:
                 self.arena = _evict_move(self.cfg)(
                     self.arena, jnp.int32(slot), jnp.int32(slot)
                 )
+                if self.debug_poison:
+                    self.arena = _poison_row(self.cfg)(
+                        self.arena, jnp.int32(slot)
+                    )
             return active  # never occupies the slot
         self.slots[slot] = active
         self._tok[slot] = int(first)
         self._pos[slot] = L
         return active
+
+    def _try_admit_paged(self, req: Request, now: float = 0.0
+                         ) -> Optional[ActiveRequest]:
+        """Paged admission = free-page accounting: reserve the worst case
+        ceil((L + max_new) / bs) pages up front (window-capped) and draw
+        them all immediately. Because admission reserves the worst case,
+        lazy per-step draws would buy no extra capacity (``available()``
+        already subtracts reservations) — eager draws make the block
+        table immutable for the row's whole decode, so the device table
+        upload is cached across every step between admissions. Slots past
+        the prompt hold stale pool data until decode writes them; the ring
+        mask zeroes them exactly (same contract as the trash page).
+        Reservation is rolled back if no row is free — a refused reserve
+        or a full house both return None and the request waits in the
+        router queue."""
+        L = len(req.prompt)
+        if L + req.max_new_tokens > self.max_row_len:
+            # cannot fit even with the whole pool: hard reject
+            self.rejects += 1
+            return ActiveRequest(request=req, admitted_at=now,
+                                 finished_at=now, rejected=True)
+        need = 0
+        if self._has_attn:
+            need = -(-min(L + req.max_new_tokens, self._row_cap)
+                     // self.block_size)
+        if not self.allocator.reserve(need):
+            return None
+        free = self.free_slots()
+        if not free:
+            self.allocator.release(need)  # rollback
+            return None
+        slot = free[0]
+        blocks = [self.allocator.alloc() for _ in range(need)]
+        self._bt[slot, :] = -1
+        self._bt[slot, :need] = blocks
+        self._bt_version += 1
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        first, self.arena = _paged_admit(self.cfg)(
+            self.params, self.arena, jnp.int32(slot), tokens,
+            jnp.asarray(self._bt[slot]),
+        )
+        if L + req.max_new_tokens > self.capacity:
+            self.over_capacity_admits += 1  # contiguous would have rejected
+        active = ActiveRequest(request=req, tokens=[int(first)],
+                               admitted_at=now)
+        if active.done:
+            # never occupies the row: return the pages
+            active.finished_at = now
+            self.allocator.free(blocks)
+            self._bt[slot, :] = -1
+            self._bt_version += 1
+            if self.debug_poison and blocks:
+                self.arena = _poison_blocks(self.cfg)(
+                    self.arena, jnp.asarray(self._block_mask(blocks))
+                )
+            self.arena = _paged_evict(self.cfg)(
+                self.arena, jnp.int32(slot), jnp.int32(slot)
+            )
+            return active
+        self.slots[slot] = active
+        self._row_blocks[slot] = blocks
+        self._tok[slot] = int(first)
+        self._pos[slot] = L
+        return active
+
+    def _block_mask(self, blocks: List[int]) -> np.ndarray:
+        mask = np.zeros(self.pool_blocks + 1, bool)  # trash never poisoned
+        mask[np.asarray(blocks, np.int64)] = True
+        return mask
 
     # ------------------------------------------------------------------
     def _step_batched(self, now: float) -> List[ActiveRequest]:
@@ -415,6 +782,76 @@ class ServeEngine:
             self.arena = _evict_move(self.cfg)(
                 self.arena, jnp.int32(last), jnp.int32(i)
             )
+            if self.debug_poison:
+                # row `last` is the vacated lane after the swap-remove
+                self.arena = _poison_row(self.cfg)(
+                    self.arena, jnp.int32(last)
+                )
+            self.slots[i] = self.slots[last]
+            self.slots[last] = None
+            self._tok[i] = self._tok[last]
+            self._pos[i] = self._pos[last]
+            cur -= 1
+        return finished
+
+    def _step_paged(self, now: float) -> List[ActiveRequest]:
+        # every page a row will ever write was drawn at admission, so the
+        # block table only mutates on admit/evict and the device upload
+        # below is a cache hit on every pure-decode step
+        na = self.num_active
+        n_rows = min(max(_next_pow2(na), 2), self.num_slots)
+        if self.cfg.window_size > 0:
+            t_view = self._table_len  # ring cache: never depth-sliced
+        else:
+            max_pos = int(self._pos[:na].max())
+            s_view = min(
+                max(_next_pow2(max_pos + 1), min(16, self._row_cap)),
+                self._row_cap,
+            )
+            t_view = -(-s_view // self.block_size)
+        active = np.zeros(n_rows, np.int32)
+        active[:na] = 1
+        key = (n_rows, t_view)
+        ent = self._bt_dev.get(key)
+        if ent is None or ent[0] != self._bt_version:
+            bt_dev = jnp.asarray(self._bt[:n_rows, :t_view])
+            self._bt_dev[key] = (self._bt_version, bt_dev)
+        else:
+            bt_dev = ent[1]
+        nxt, self.arena = _paged_step(self.cfg, n_rows, t_view)(
+            self.params, self.arena,
+            jnp.asarray(self._tok[:n_rows]), jnp.asarray(self._pos[:n_rows]),
+            jnp.asarray(active), bt_dev,
+        )
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        finished: List[ActiveRequest] = []
+        for i in range(na):
+            a = self.slots[i]
+            a.tokens.append(int(nxt[i]))
+            self._tok[i] = int(nxt[i])
+            self._pos[i] += 1
+        done_rows = [i for i in range(na) if self.slots[i].done]
+        cur = na
+        for i in sorted(done_rows, reverse=True):
+            a = self.slots[i]
+            a.finished_at = now
+            finished.append(a)
+            freed = self._row_blocks[i]
+            self.allocator.free(freed)
+            if self.debug_poison and freed:
+                self.arena = _poison_blocks(self.cfg)(
+                    self.arena, jnp.asarray(self._block_mask(freed))
+                )
+            last = cur - 1
+            self.arena = _paged_evict(self.cfg)(
+                self.arena, jnp.int32(last), jnp.int32(i)
+            )
+            self._bt[i] = self._bt[last]
+            self._bt[last] = -1
+            self._bt_version += 1
+            self._row_blocks[i] = self._row_blocks[last]
+            self._row_blocks[last] = []
             self.slots[i] = self.slots[last]
             self.slots[last] = None
             self._tok[i] = self._tok[last]
@@ -447,6 +884,8 @@ class ServeEngine:
         that finished this step (their slots are freed). No-op when idle."""
         if self.num_active == 0:
             return []
+        if self.kv_layout == "paged":
+            return self._step_paged(now)
         if self.fused_mode == "batched":
             return self._step_batched(now)
         return self._step_vmap(now)

@@ -1,0 +1,81 @@
+"""Host-side KV block allocator for the paged serving arena.
+
+The arena is a global pool of ``num_blocks`` fixed-size KV pages (plus one
+trash page owned by the device cache, never by this allocator). Rows hold
+pages via block tables; the allocator owns the free list and the
+reservation ledger.
+
+Invariants (asserted by tests/test_paged_kv.py):
+  * every allocatable block id is in exactly one place — the free list or
+    one row's table; the trash page is in neither
+  * ``reserved`` counts pages promised but not yet drawn (the engine
+    reserves the worst case ceil((L + max_new) / bs) at admission and
+    draws it immediately, so its reservations are transient; the ledger
+    still exists so a multi-step reserve -> draw flow stays safe)
+  * ``available() = free - reserved`` and never goes negative: a reserve
+    that would overdraw is refused, which is exactly the admission-control
+    signal (free-block accounting replaces per-slot capacity)
+  * a failed admission after a successful reserve MUST ``release`` the
+    reservation (rollback), or the pages leak as phantom promises
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+class BlockAllocator:
+    """LIFO free-list allocator over block ids [0, num_blocks)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"need at least one block, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks))
+        self.reserved = 0
+
+    def free_blocks(self) -> int:
+        """Blocks on the free list (including reserved-but-undrawn ones)."""
+        return len(self._free)
+
+    def available(self) -> int:
+        """Blocks that a new reservation could claim."""
+        return len(self._free) - self.reserved
+
+    def reserve(self, n: int) -> bool:
+        """Promise ``n`` future allocs; False (and no change) if they could
+        not all be honored."""
+        if n < 0:
+            raise ValueError(f"cannot reserve {n} blocks")
+        if n > self.available():
+            return False
+        self.reserved += n
+        return True
+
+    def release(self, n: int) -> None:
+        """Return ``n`` undrawn promises (admission rollback / eviction of
+        a row that had not drawn its full reservation)."""
+        if n < 0 or n > self.reserved:
+            raise ValueError(
+                f"release({n}) with reserved={self.reserved}"
+            )
+        self.reserved -= n
+
+    def alloc(self) -> int:
+        """Draw one previously reserved block. LIFO: the most recently
+        freed page is handed out first, so steady-state serving churns a
+        small hot set (and tests see maximally 'fragmented' tables)."""
+        if self.reserved < 1:
+            raise RuntimeError("alloc() without a reservation")
+        if not self._free:
+            raise RuntimeError("alloc() from an empty free list")
+        self.reserved -= 1
+        return self._free.pop()
+
+    def free(self, blocks: Iterable[int]) -> None:
+        """Return drawn blocks to the pool (eviction / completion)."""
+        for b in blocks:
+            if not (0 <= b < self.num_blocks):
+                raise ValueError(f"block id {b} out of range")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)

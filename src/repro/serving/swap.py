@@ -17,6 +17,9 @@ KV/recurrent caches are documented on ``ServeEngine.swap_params``.
 """
 from __future__ import annotations
 
+import json
+import os
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -41,6 +44,10 @@ class SwapReport:
     stall_s: Dict[int, float] = field(default_factory=dict)  # per replica
     inflight_before: int = 0
     reassigned_to_global: List[int] = field(default_factory=list)
+    # checkpoint-write -> adoption latency (epoch seconds; 0.0 = unknown,
+    # e.g. a swap driven by an in-memory checkpoint rather than a watcher)
+    ckpt_written_at: float = 0.0
+    adopted_at: float = 0.0
 
     @property
     def max_stall_ms(self) -> float:
@@ -49,6 +56,89 @@ class SwapReport:
     @property
     def total_stall_ms(self) -> float:
         return 1e3 * sum(self.stall_s.values())
+
+    @property
+    def ckpt_to_adoption_ms(self) -> float:
+        """Wall time from the round manifest landing on disk to every
+        replica running the new weights."""
+        if self.ckpt_written_at <= 0.0 or self.adopted_at <= 0.0:
+            return 0.0
+        return 1e3 * (self.adopted_at - self.ckpt_written_at)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-arrival detection
+# ---------------------------------------------------------------------------
+
+
+def manifest_path(ckpt_dir: str, round_: int) -> str:
+    return os.path.join(ckpt_dir, f"round{round_:03d}.json")
+
+
+def write_checkpoint_manifest(ckpt_dir: str, ckpt: MergeCheckpoint) -> str:
+    """Publish a merge round for watchers: a small JSON manifest written
+    atomically (tmp + rename) AFTER the npz files, so a watcher that sees
+    the manifest can always load every referenced checkpoint."""
+    path = manifest_path(ckpt_dir, ckpt.round)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({
+            "round": ckpt.round,
+            "rep_paths": {str(k): v for k, v in ckpt.rep_paths.items()},
+            "global_path": ckpt.global_path,
+            "groups": [list(g) for g in ckpt.groups],
+        }, f)
+    os.replace(tmp, path)
+    return path
+
+
+class CheckpointWatcher:
+    """Polls a checkpoint directory for newly published merge rounds.
+
+    The serving loop calls :meth:`poll` between ticks; the first manifest
+    with ``round > after_round`` that has not been yielded yet comes back
+    as ``(MergeCheckpoint, mtime)`` — the mtime is the manifest's write
+    time, the start of the swap-latency clock. Polling is rate-limited to
+    ``min_poll_s`` so a tick-speed loop does not turn into a stat storm."""
+
+    def __init__(self, ckpt_dir: str, after_round: int = -1,
+                 min_poll_s: float = 0.05):
+        self.ckpt_dir = ckpt_dir
+        self.after_round = int(after_round)
+        self.min_poll_s = float(min_poll_s)
+        self._seen = set()
+        self._last_poll = 0.0
+
+    def poll(self) -> Optional[Tuple[MergeCheckpoint, float]]:
+        now = time.monotonic()
+        if now - self._last_poll < self.min_poll_s:
+            return None
+        self._last_poll = now
+        try:
+            names = sorted(os.listdir(self.ckpt_dir))
+        except FileNotFoundError:
+            return None
+        for name in names:
+            if not (name.startswith("round") and name.endswith(".json")):
+                continue
+            try:
+                round_ = int(name[len("round"):-len(".json")])
+            except ValueError:
+                continue
+            if round_ <= self.after_round or round_ in self._seen:
+                continue
+            path = os.path.join(self.ckpt_dir, name)
+            with open(path) as f:
+                doc = json.load(f)
+            self._seen.add(round_)
+            ckpt = MergeCheckpoint(
+                round=int(doc["round"]),
+                rep_paths={int(k): v for k, v in doc["rep_paths"].items()},
+                global_path=doc["global_path"],
+                groups=tuple(tuple(g) for g in doc["groups"]),
+            )
+            return ckpt, os.path.getmtime(path)
+        return None
 
 
 def load_model(path: str, template):
@@ -62,13 +152,17 @@ def swap_replicas(
     ckpt: MergeCheckpoint,
     template,
     update_router: bool = True,
+    ckpt_written_at: float = 0.0,
 ) -> SwapReport:
     """Swap every engine in ``replicas`` to ``ckpt``'s weights and fold the
     new merge groups into the router map. In-flight requests stay in their
     slots across the swap (counted in the report so drivers can assert
-    they survive)."""
+    they survive). ``ckpt_written_at`` (the round manifest's mtime from a
+    :class:`CheckpointWatcher`) stamps the checkpoint-to-adoption latency
+    on the report."""
     report = SwapReport(round=ckpt.round,
-                        inflight_before=replicas.num_inflight)
+                        inflight_before=replicas.num_inflight,
+                        ckpt_written_at=float(ckpt_written_at))
     for key, eng in replicas.engines.items():
         if key == GLOBAL:
             path = ckpt.global_path
@@ -79,6 +173,7 @@ def swap_replicas(
             path = ckpt.global_path
             report.reassigned_to_global.append(key)
         report.stall_s[key] = eng.swap_params(load_model(path, template))
+    report.adopted_at = time.time()
     if update_router:
         replicas.router.update(ckpt.groups)
     return report
